@@ -1,0 +1,63 @@
+"""Table 9 (DPP worker throughput + workers/trainer) and Fig. 9 (bottleneck
+breakdown), both analytic (fleet hardware) and measured (this container)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_us
+from repro.core import dwrf
+from repro.core.datagen import DataGenConfig
+from repro.core.dpp import DPPSession, SessionSpec
+from repro.core.dpp.simulator import (
+    C_V1, C_V2, C_SOTA, NODE_SPECS, WORKLOADS, worker_throughput, workers_per_trainer,
+)
+from repro.core.schema import make_schema
+from repro.core.transforms import default_dlrm_pipeline
+from repro.core.warehouse import Warehouse
+
+
+def run() -> None:
+    for name, w in WORKLOADS.items():
+        t = worker_throughput(w, C_V1)
+        emit(
+            f"table9.{name}", 0.0,
+            f"kQPS={t.kqps:.2f} storageRX={t.storage_rx_gbps:.2f}GB/s "
+            f"trRX={t.transform_rx_gbps:.2f} TX={t.tx_gbps:.2f} "
+            f"workers_per_trainer={workers_per_trainer(w, C_V1):.1f} bound={t.bound}",
+        )
+        emit(
+            f"fig9.{name}.utilization", 0.0,
+            " ".join(f"{k}={v:.2f}" for k, v in t.utilization.items()),
+        )
+    # §6.3 forward-looking: bottleneck shift across node generations
+    for node in ("C-v1", "C-v2", "C-v3", "C-vSotA"):
+        b = worker_throughput(WORKLOADS["RM2"], NODE_SPECS[node]).bound
+        emit(f"table10.RM2_bound.{node}", 0.0, f"bound={b}")
+
+    # measured on this container: one real DPP worker epoch
+    schema = make_schema("bdpp", 60, 12, seed=0)
+    wh = Warehouse()
+    t = wh.create_table(schema)
+    t.generate(1, DataGenConfig(rows_per_partition=4096, seed=1),
+               dwrf.DwrfWriterOptions(flattened=True, stripe_rows=1024))
+    dense, sparse = schema.dense_ids[:20], schema.sparse_ids[:8]
+    pipe = default_dlrm_pipeline(dense, sparse, hash_size=100_000, n_derived=6)
+    spec = SessionSpec(
+        table="bdpp", partitions=(0,), feature_ids=tuple(pipe.required_features()),
+        transform_specs=tuple(pipe.specs), batch_size=512, rows_per_split=1024,
+        dense_keys=tuple(f"d{f}" for f in dense),
+        sparse_keys=tuple(f"s{f}" for f in sparse) + tuple(f"g{j}" for j in range(6)),
+        max_ids_per_feature=16,
+    )
+    sess = DPPSession(spec, t, n_workers=1)
+    import time
+    t0 = time.perf_counter()
+    batches = sess.run_to_completion(timeout_s=120)
+    wall = time.perf_counter() - t0
+    m = sess.worker_metrics()
+    rows = sum(b["label"].shape[0] for b in batches)
+    emit(
+        "table9.measured_local_worker", wall / max(rows, 1) * 1e6,
+        f"kQPS={rows/wall/1e3:.2f} storage_rx={m.storage_rx_bytes} tx={m.tx_bytes} "
+        f"breakdown=" + "/".join(f"{k}:{v:.2f}" for k, v in m.cycle_breakdown().items()),
+    )

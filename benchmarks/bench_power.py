@@ -1,0 +1,16 @@
+"""Fig. 1: storage / preprocessing / training power split per model."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.dpp.simulator import WORKLOADS, dsi_power_split
+
+
+def run() -> None:
+    for name, w in WORKLOADS.items():
+        p = dsi_power_split(w, n_trainers=16)
+        emit(
+            f"fig1.power_split.{name}", 0.0,
+            f"storage={p['storage_frac']:.2f} preprocessing={p['preprocessing_frac']:.2f} "
+            f"training={p['training_frac']:.2f} "
+            f"dsi_total={p['storage_frac']+p['preprocessing_frac']:.2f}",
+        )

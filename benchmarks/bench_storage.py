@@ -1,0 +1,52 @@
+"""Tables 3/4/5 (dataset sizes + selective reading) and Table 6 (I/O sizes)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_us
+from repro.core import dwrf
+from repro.core.datagen import DataGenConfig
+from repro.core.reader import TableReader, plan_reads
+from repro.core.schema import make_schema
+from repro.core.warehouse import Warehouse
+
+
+def run() -> None:
+    # RM1-shaped table at reduced scale: 12k+1.8k features -> 1:10 scale
+    schema = make_schema("rm1", n_dense=1200, n_sparse=180, seed=0)
+    wh = Warehouse()
+    t = wh.create_table(schema)
+    us = time_us(
+        lambda: t.generate(
+            1, DataGenConfig(rows_per_partition=1024, seed=1),
+            dwrf.DwrfWriterOptions(flattened=True, stripe_rows=256),
+        ),
+        repeat=1,
+    )
+    emit("table3.write_partition", us, f"partition_bytes={t.partitions[0].nbytes}")
+
+    # a representative job projection: ~11% of features, popularity-weighted
+    rng = np.random.default_rng(0)
+    fids = np.array(schema.logged_ids)
+    pops = np.array([schema.feature(f).popularity for f in fids]); pops /= pops.sum()
+    proj = sorted(rng.choice(fids, size=len(fids) // 9, replace=False, p=pops).tolist())
+    reader = TableReader(t, proj)
+    stats = reader.projection_stats()
+    emit(
+        "table5.selective_reading", 0.0,
+        f"pct_features={stats['pct_features_used']:.1f} "
+        f"pct_bytes={stats['pct_bytes_used']:.1f} (paper: 9-11% / 21-37%)",
+    )
+
+    # Table 6: I/O sizes WITHOUT coalescing (raw per-stream reads)
+    plan = plan_reads(t.partitions[0].footer, proj, coalesce_window=0)
+    sizes = np.array([l for _, l in plan.extents])
+    emit(
+        "table6.io_sizes_uncoalesced", 0.0,
+        f"mean={sizes.mean():.0f}B p5={np.percentile(sizes,5):.0f} "
+        f"p50={np.percentile(sizes,50):.0f} p95={np.percentile(sizes,95):.0f} "
+        f"n_ios={len(sizes)} (paper: mean 23.2KB p50 1.24KB)",
+    )
+
+    us = time_us(lambda: reader.read_partition(t.partitions[0]), repeat=2)
+    emit("table5.read_projection", us, f"rows=1024")

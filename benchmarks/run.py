@@ -1,0 +1,49 @@
+"""Benchmark driver: one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only storage,dpp,...]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+SECTIONS = [
+    "storage",          # Tables 3/4/5/6
+    "popularity",       # Fig 7
+    "dpp",              # Table 9 / Fig 9 / Table 10
+    "trainer",          # Table 8 / Fig 8 / Table 7
+    "optimizations",    # Table 12
+    "kernels",          # §7.2 fused transform + hot kernels
+    "power",            # Fig 1
+    "coordination",     # Figs 4/5/6, Table 2
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated section list")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    failures = []
+    for section in SECTIONS:
+        if only and section not in only:
+            continue
+        print(f"# === {section} ===")
+        try:
+            mod = __import__(f"benchmarks.bench_{section}", fromlist=["run"])
+            mod.run()
+        except Exception as e:  # keep going; report at the end
+            failures.append((section, e))
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILED sections: {[s for s, _ in failures]}")
+        sys.exit(1)
+    print("# all benchmark sections completed")
+
+
+if __name__ == "__main__":
+    main()

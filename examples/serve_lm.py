@@ -1,0 +1,24 @@
+"""Serve a small LM with batched requests: prefill + continuous decode.
+
+  PYTHONPATH=src python examples/serve_lm.py [--arch qwen3-8b]
+"""
+import argparse
+import subprocess
+import sys
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    args = ap.parse_args()
+    sys.argv = [
+        "serve", "--arch", args.arch, "--smoke",
+        "--batch", "8", "--prompt-len", "64", "--decode-steps", "32",
+    ]
+    raise SystemExit(serve.main())
+
+
+if __name__ == "__main__":
+    main()

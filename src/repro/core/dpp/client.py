@@ -1,0 +1,83 @@
+"""DPP Clients: trainer-side data plane (§3.2.1).
+
+One Client per training node.  Exposes ``get_batch()`` (the hook the
+training runtime calls); requests are routed to Workers with partitioned
+round-robin so the number of connections per Client and per Worker stays
+capped, and data-stall time (waiting on an empty buffer) is accounted —
+the trainer-side metric behind Table 7.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ClientMetrics:
+    batches: int = 0
+    rx_bytes: int = 0
+    stall_s: float = 0.0
+    stalls: int = 0
+    wait_calls: int = 0
+
+
+class DPPClient:
+    def __init__(
+        self,
+        client_id: str,
+        workers: Sequence,                 # List[DPPWorker]
+        fanout: int = 4,                   # partitioned round-robin cap
+    ):
+        self.client_id = client_id
+        self._all_workers = list(workers)
+        self.fanout = fanout
+        self.metrics = ClientMetrics()
+        self._rr = 0
+        self._partition_offset = abs(hash(client_id)) % max(len(workers), 1)
+
+    def rebind(self, workers: Sequence) -> None:
+        """Auto-scaling / worker restarts change the worker set."""
+        self._all_workers = list(workers)
+
+    def _my_workers(self) -> List:
+        live = [w for w in self._all_workers if w.alive or w.buffered > 0]
+        if not live:
+            return []
+        k = min(self.fanout, len(live))
+        start = self._partition_offset % len(live)
+        return [live[(start + i) % len(live)] for i in range(k)]
+
+    def get_batch(
+        self, timeout: float = 10.0
+    ) -> Optional[Dict[str, np.ndarray]]:
+        """Round-robin poll over this client's worker partition."""
+        t0 = time.perf_counter()
+        deadline = t0 + timeout
+        stalled = False
+        self.metrics.wait_calls += 1
+        while time.perf_counter() < deadline:
+            mine = self._my_workers()
+            if not mine:
+                time.sleep(0.005)
+                stalled = True
+                continue
+            for i in range(len(mine)):
+                w = mine[(self._rr + i) % len(mine)]
+                batch = w.get_batch(timeout=0.0) if w.buffered else None
+                if batch is None and w.alive:
+                    batch = w.get_batch(timeout=0.002)
+                if batch is not None:
+                    self._rr = (self._rr + i + 1) % max(len(mine), 1)
+                    self.metrics.batches += 1
+                    self.metrics.rx_bytes += sum(a.nbytes for a in batch.values())
+                    if stalled:
+                        self.metrics.stalls += 1
+                    self.metrics.stall_s += time.perf_counter() - t0
+                    return batch
+            stalled = True
+        self.metrics.stall_s += time.perf_counter() - t0
+        self.metrics.stalls += 1
+        return None

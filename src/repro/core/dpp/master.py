@@ -1,0 +1,210 @@
+"""DPP control plane: the Master (§3.2.1).
+
+Responsibilities (paper-faithful):
+  * break the preprocessing workload into self-contained **splits**
+    (successive row ranges of the dataset) and serve them to Workers,
+  * track split progress; re-dispatch splits whose lease expired
+    (worker failure / straggler mitigation),
+  * periodic **checkpoints** of reader state for restore-on-failure,
+  * worker health monitoring (heartbeats) with automatic restart hooks,
+  * an **auto-scaling controller** that watches buffered-tensor depth and
+    worker utilization and computes how many Workers to launch or drain.
+
+The Master itself is replicated in production; here `checkpoint()` /
+`DPPMaster.restore()` provide the equivalent failover path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.transforms import TransformPipeline, TransformSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionSpec:
+    """The PyTorch-DataSet analogue shipped by FBLearner Flow."""
+
+    table: str
+    partitions: Tuple[int, ...]
+    feature_ids: Tuple[int, ...]
+    transform_specs: Tuple[TransformSpec, ...]
+    batch_size: int = 512
+    rows_per_split: int = 2048
+    dense_keys: Tuple[str, ...] = ()
+    sparse_keys: Tuple[str, ...] = ()
+    max_ids_per_feature: int = 32
+
+    def pipeline(self) -> TransformPipeline:
+        return TransformPipeline(list(self.transform_specs))
+
+
+@dataclasses.dataclass
+class Split:
+    split_id: int
+    partition: int
+    row_start: int
+    row_end: int
+
+
+@dataclasses.dataclass
+class _Lease:
+    worker_id: str
+    deadline: float
+
+
+@dataclasses.dataclass
+class AutoScaler:
+    """§3.2.1: keep a non-zero buffered-tensor depth with maximal worker
+    utilization — scale out on (near-)empty buffers, drain on deep buffers
+    and low utilization."""
+
+    target_buffer_low: int = 2
+    target_buffer_high: int = 32
+    util_high: float = 0.85
+    util_low: float = 0.3
+    min_workers: int = 1
+    max_workers: int = 256
+
+    def decide(
+        self,
+        n_workers: int,
+        buffered_batches: int,
+        mean_cpu_util: float,
+        stalls_since_last: int,
+    ) -> int:
+        """Returns the worker-count delta (+launch / -drain)."""
+        if stalls_since_last > 0 or buffered_batches < self.target_buffer_low:
+            grow = max(1, int(0.5 * n_workers))
+            return min(grow, self.max_workers - n_workers)
+        if (
+            buffered_batches > self.target_buffer_high
+            and mean_cpu_util < self.util_low
+            and n_workers > self.min_workers
+        ):
+            return -max(1, int(0.25 * n_workers))
+        return 0
+
+
+class DPPMaster:
+    def __init__(
+        self,
+        spec: SessionSpec,
+        partition_rows: Dict[int, int],
+        lease_s: float = 30.0,
+        autoscaler: Optional[AutoScaler] = None,
+    ):
+        self.spec = spec
+        self.lease_s = lease_s
+        self.autoscaler = autoscaler or AutoScaler()
+        self._lock = threading.Lock()
+        self._splits: Dict[int, Split] = {}
+        self._pending: List[int] = []
+        self._leased: Dict[int, _Lease] = {}
+        self._done: set = set()
+        self._workers: Dict[str, float] = {}      # worker_id -> last heartbeat
+        self._restarts: List[str] = []
+        self._build_splits(partition_rows)
+
+    def _build_splits(self, partition_rows: Dict[int, int]) -> None:
+        sid = 0
+        for p in self.spec.partitions:
+            rows = partition_rows[p]
+            for start in range(0, rows, self.spec.rows_per_split):
+                end = min(start + self.spec.rows_per_split, rows)
+                self._splits[sid] = Split(sid, p, start, end)
+                self._pending.append(sid)
+                sid += 1
+
+    # -- work distribution ---------------------------------------------------
+
+    def get_split(self, worker_id: str) -> Optional[Split]:
+        with self._lock:
+            self._workers[worker_id] = time.time()
+            self._reclaim_expired_locked()
+            if not self._pending:
+                return None
+            sid = self._pending.pop(0)
+            self._leased[sid] = _Lease(worker_id, time.time() + self.lease_s)
+            return self._splits[sid]
+
+    def complete_split(self, worker_id: str, split_id: int) -> None:
+        with self._lock:
+            lease = self._leased.pop(split_id, None)
+            self._done.add(split_id)
+
+    def _reclaim_expired_locked(self) -> None:
+        now = time.time()
+        expired = [sid for sid, l in self._leased.items() if l.deadline < now]
+        for sid in expired:
+            # straggler mitigation / failure handling: re-dispatch
+            del self._leased[sid]
+            if sid not in self._done:
+                self._pending.insert(0, sid)
+
+    @property
+    def progress(self) -> Tuple[int, int]:
+        with self._lock:
+            return len(self._done), len(self._splits)
+
+    @property
+    def finished(self) -> bool:
+        done, total = self.progress
+        return done >= total
+
+    # -- health / fault tolerance ---------------------------------------------
+
+    def heartbeat(self, worker_id: str) -> None:
+        with self._lock:
+            self._workers[worker_id] = time.time()
+
+    def dead_workers(self, timeout_s: float = 10.0) -> List[str]:
+        now = time.time()
+        with self._lock:
+            return [w for w, t in self._workers.items() if now - t > timeout_s]
+
+    def forget_worker(self, worker_id: str) -> None:
+        """Worker died: release its leases immediately (stateless workers —
+        no checkpoint restore needed, §3.2.1)."""
+        with self._lock:
+            self._workers.pop(worker_id, None)
+            for sid, l in list(self._leased.items()):
+                if l.worker_id == worker_id:
+                    del self._leased[sid]
+                    if sid not in self._done:
+                        self._pending.insert(0, sid)
+            self._restarts.append(worker_id)
+
+    # -- checkpointing -----------------------------------------------------------
+
+    def checkpoint(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "spec": self.spec,
+                "done": sorted(self._done),
+                "n_splits": len(self._splits),
+            }
+
+    @classmethod
+    def restore(
+        cls,
+        ckpt: Dict[str, Any],
+        partition_rows: Dict[int, int],
+        lease_s: float = 30.0,
+    ) -> "DPPMaster":
+        m = cls(ckpt["spec"], partition_rows, lease_s=lease_s)
+        with m._lock:
+            for sid in ckpt["done"]:
+                m._done.add(sid)
+                if sid in m._pending:
+                    m._pending.remove(sid)
+        return m
+
+    # -- auto-scaling ---------------------------------------------------------------
+
+    def scaling_decision(
+        self, n_workers: int, buffered: int, cpu_util: float, stalls: int
+    ) -> int:
+        return self.autoscaler.decide(n_workers, buffered, cpu_util, stalls)

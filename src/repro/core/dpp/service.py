@@ -1,0 +1,149 @@
+"""In-process DPP session runner: Master + Workers + Clients + monitor.
+
+The fully-managed-service behavior of §3.2.1 in one process: launches the
+Master and an initial worker fleet, monitors health (restarting dead
+Workers without checkpoint restore — they are stateless), runs the
+auto-scaling controller, and wires Clients for the training side.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.dpp.client import DPPClient
+from repro.core.dpp.master import AutoScaler, DPPMaster, SessionSpec
+from repro.core.dpp.worker import DPPWorker, WorkerMetrics
+from repro.core.warehouse import Table
+
+
+class DPPSession:
+    def __init__(
+        self,
+        spec: SessionSpec,
+        table: Table,
+        n_workers: int = 2,
+        n_clients: int = 1,
+        auto_scale: bool = False,
+        monitor_interval_s: float = 0.2,
+        lease_s: float = 5.0,
+        max_workers: int = 16,
+        tensor_cache=None,
+    ):
+        self.spec = spec
+        self.table = table
+        partition_rows = {p: table.partitions[p].num_rows for p in spec.partitions}
+        self.master = DPPMaster(
+            spec, partition_rows, lease_s=lease_s,
+            autoscaler=AutoScaler(max_workers=max_workers),
+        )
+        self.tensor_cache = tensor_cache
+        self.workers: List[DPPWorker] = []
+        self._wid = 0
+        for _ in range(n_workers):
+            self._launch_worker()
+        self.clients = [
+            DPPClient(f"client{i}", self.workers) for i in range(n_clients)
+        ]
+        self.auto_scale = auto_scale
+        self.monitor_interval_s = monitor_interval_s
+        self._stop = threading.Event()
+        self._monitor: Optional[threading.Thread] = None
+        self.scale_events: List[Dict] = []
+        self.restart_events: List[str] = []
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def _launch_worker(self, fail_after: Optional[int] = None) -> DPPWorker:
+        w = DPPWorker(
+            f"w{self._wid}", self.master, self.table,
+            fail_after_splits=fail_after, tensor_cache=self.tensor_cache,
+        )
+        self._wid += 1
+        self.workers.append(w)
+        return w
+
+    def start(self) -> None:
+        for w in self.workers:
+            if w._thread is None:
+                w.start()
+        self._monitor = threading.Thread(target=self._monitor_loop, daemon=True)
+        self._monitor.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        for w in self.workers:
+            w.stop()
+        for w in self.workers:
+            w.join(timeout=2.0)
+
+    # -- monitor: health + autoscaling -----------------------------------------
+
+    def _monitor_loop(self) -> None:
+        last_stalls = 0
+        while not self._stop.is_set() and not self.master.finished:
+            time.sleep(self.monitor_interval_s)
+            # health: restart dead workers (stateless -> no restore needed)
+            for w in list(self.workers):
+                if not w.alive and w._thread is not None and not w._thread.is_alive():
+                    if not self.master.finished:
+                        self.master.forget_worker(w.worker_id)
+                        self.workers.remove(w)
+                        nw = self._launch_worker()
+                        nw.start()
+                        self.restart_events.append(w.worker_id)
+                        for c in self.clients:
+                            c.rebind(self.workers)
+            if not self.auto_scale:
+                continue
+            buffered = sum(w.buffered for w in self.workers)
+            stalls = sum(c.metrics.stalls for c in self.clients)
+            busy = sum(w.metrics.busy_s for w in self.workers)
+            wall = max(self.monitor_interval_s, 1e-6) * max(len(self.workers), 1)
+            cpu_util = min(busy / wall, 1.0)
+            delta = self.master.scaling_decision(
+                len(self.workers), buffered, cpu_util, stalls - last_stalls
+            )
+            last_stalls = stalls
+            if delta > 0:
+                for _ in range(delta):
+                    w = self._launch_worker()
+                    w.start()
+                for c in self.clients:
+                    c.rebind(self.workers)
+                self.scale_events.append({"t": time.time(), "delta": delta})
+            elif delta < 0:
+                victims = self.workers[delta:]
+                for v in victims:
+                    v.stop()   # drain: stops pulling new splits
+                self.scale_events.append({"t": time.time(), "delta": delta})
+
+    # -- aggregate metrics -------------------------------------------------------
+
+    def worker_metrics(self) -> WorkerMetrics:
+        total = WorkerMetrics()
+        for w in self.workers:
+            total.merge(w.metrics)
+        return total
+
+    def run_to_completion(
+        self, max_batches: Optional[int] = None, timeout_s: float = 120.0
+    ) -> List[Dict[str, np.ndarray]]:
+        """Drive client 0 until the dataset is exhausted (one epoch, §5.1)."""
+        self.start()
+        out = []
+        deadline = time.time() + timeout_s
+        while time.time() < deadline:
+            batch = self.clients[0].get_batch(timeout=1.0)
+            if batch is not None:
+                out.append(batch)
+                if max_batches and len(out) >= max_batches:
+                    break
+                continue
+            if self.master.finished and all(w.buffered == 0 for w in self.workers):
+                break
+        self.stop()
+        return out

@@ -1,0 +1,208 @@
+"""DPP data plane: stateless Workers (§3.2.1).
+
+Per split: **extract** (read + decrypt + decompress + decode raw stream
+chunks, filter unused features), **transform** (per-feature DAG via
+high-performance vectorized kernels), and partially **load** (batch into
+ready-to-serve tensors kept in a bounded in-memory buffer).
+
+Workers account bytes and CPU-time per ETL phase — the measurements behind
+Table 9 ("Storage RX / Transform RX / TX") and Fig. 9's cycle breakdown.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.dpp.master import DPPMaster, SessionSpec, Split
+from repro.core.reader import TableReader
+from repro.core.transforms import materialize_dlrm_batch
+from repro.core.warehouse import Table
+
+
+@dataclasses.dataclass
+class WorkerMetrics:
+    storage_rx_bytes: int = 0          # compressed, from storage
+    extract_out_bytes: int = 0         # decoded columnar bytes (transform RX)
+    tx_bytes: int = 0                  # materialized tensor bytes (transform TX)
+    extract_s: float = 0.0
+    transform_s: float = 0.0
+    load_s: float = 0.0
+    splits_done: int = 0
+    rows_done: int = 0
+
+    def merge(self, o: "WorkerMetrics") -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(self, f.name) + getattr(o, f.name))
+
+    @property
+    def busy_s(self) -> float:
+        return self.extract_s + self.transform_s + self.load_s
+
+    def cycle_breakdown(self) -> Dict[str, float]:
+        t = max(self.busy_s, 1e-9)
+        return {
+            "extraction": self.extract_s / t,
+            "transformation": self.transform_s / t,
+            "load_misc": self.load_s / t,
+        }
+
+
+class DPPWorker:
+    """Stateless worker: pulls splits, produces tensor batches into a buffer."""
+
+    def __init__(
+        self,
+        worker_id: str,
+        master: DPPMaster,
+        table: Table,
+        buffer_size: int = 8,
+        fail_after_splits: Optional[int] = None,   # fault-injection hook
+        tensor_cache=None,                         # shared TensorCache (§7.5)
+    ):
+        self.worker_id = worker_id
+        self.master = master
+        self.table = table
+        self.spec = master.spec
+        self.pipeline = self.spec.pipeline()       # pulled from Master at startup
+        self.buffer: "queue.Queue[Dict[str, np.ndarray]]" = queue.Queue(buffer_size)
+        self.metrics = WorkerMetrics()
+        self.fail_after_splits = fail_after_splits
+        self.tensor_cache = tensor_cache
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.alive = True
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> None:
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        if self._thread:
+            self._thread.join(timeout)
+
+    # -- main loop ------------------------------------------------------------
+
+    def _run(self) -> None:
+        reader = TableReader(
+            self.table, list(self.spec.feature_ids), record_popularity=False
+        )
+        while not self._stop.is_set():
+            if (
+                self.fail_after_splits is not None
+                and self.metrics.splits_done >= self.fail_after_splits
+            ):
+                self.alive = False  # simulated crash: stop heartbeating
+                return
+            split = self.master.get_split(self.worker_id)
+            if split is None:
+                if self.master.finished:
+                    break
+                time.sleep(0.01)
+                continue
+            try:
+                for batch in self.process_split(reader, split):
+                    while not self._stop.is_set():
+                        try:
+                            self.buffer.put(batch, timeout=0.1)
+                            break
+                        except queue.Full:
+                            continue
+                self.master.complete_split(self.worker_id, split.split_id)
+            except Exception:
+                # let the lease expire; Master re-dispatches
+                self.alive = False
+                raise
+        self.alive = False
+
+    # -- ETL -------------------------------------------------------------------
+
+    def process_split(self, reader: TableReader, split: Split):
+        """Extract + transform + batch one split; yields tensor minibatches."""
+        meta = self.table.partitions[split.partition]
+
+        if self.tensor_cache is not None:
+            from repro.core.dpp.tensor_cache import TensorCache
+
+            key = TensorCache.key(self.spec, split)
+            cached = self.tensor_cache.get(key)
+            if cached is not None:
+                self.metrics.splits_done += 1
+                self.metrics.rows_done += split.row_end - split.row_start
+                return cached
+
+        t0 = time.perf_counter()
+        result = reader.read_partition(meta, row_limit=None)
+        cols = result.batch.slice_rows(split.row_start, split.row_end)
+        t1 = time.perf_counter()
+
+        env = self.pipeline(cols)
+        t2 = time.perf_counter()
+
+        bs = self.spec.batch_size
+        n = cols.num_rows
+        out = []
+        for start in range(0, n, bs):
+            stop = min(start + bs, n)
+            sub_env = _slice_env(env, start, stop)
+            tensors = materialize_dlrm_batch(
+                sub_env,
+                self.spec.dense_keys,
+                self.spec.sparse_keys,
+                self.spec.max_ids_per_feature,
+                labels=cols.labels[start:stop] if cols.labels is not None else None,
+            )
+            out.append(tensors)
+        t3 = time.perf_counter()
+
+        if self.tensor_cache is not None:
+            self.tensor_cache.put(key, out, cpu_s=t3 - t0)
+
+        m = self.metrics
+        m.storage_rx_bytes += result.bytes_read
+        m.extract_out_bytes += cols.nbytes()
+        m.tx_bytes += sum(sum(a.nbytes for a in b.values()) for b in out)
+        m.extract_s += t1 - t0
+        m.transform_s += t2 - t1
+        m.load_s += t3 - t2
+        m.splits_done += 1
+        m.rows_done += n
+        return out
+
+    # -- serving to clients ------------------------------------------------------
+
+    def get_batch(self, timeout: float = 0.5) -> Optional[Dict[str, np.ndarray]]:
+        try:
+            return self.buffer.get(timeout=timeout)
+        except queue.Empty:
+            return None
+
+    @property
+    def buffered(self) -> int:
+        return self.buffer.qsize()
+
+
+def _slice_env(env: Dict[str, Any], start: int, stop: int) -> Dict[str, Any]:
+    from repro.core.schema import SparseColumn
+
+    out = {}
+    for k, v in env.items():
+        if isinstance(v, SparseColumn):
+            off = v.offsets[start: stop + 1]
+            out[k] = SparseColumn(
+                offsets=off - off[0],
+                values=v.values[off[0]: off[-1]],
+                scores=v.scores[off[0]: off[-1]] if v.scores is not None else None,
+            )
+        else:
+            out[k] = v[start:stop]
+    return out

@@ -1,0 +1,176 @@
+"""Selective table reader: feature projection -> I/O plan -> decoded columns.
+
+Implements the read-path co-design ladder of Table 12:
+  * map files: whole-stripe reads (baseline; massive over-read),
+  * flattened files: per-feature stream reads (tiny I/Os, HDD seek cliff),
+  * **coalesced reads (CR)**: merge selected stream extents whose gap keeps
+    the merged I/O within ``coalesce_window`` bytes (1.25 MiB, §7.5) —
+    over-reading the skipped bytes to amortize seeks,
+  * feature reordering (FR) happens at write time (warehouse) and shows up
+    here as fewer over-read bytes inside each coalesced window.
+
+Every read returns both the decoded columns and an I/O accounting record
+(bytes used vs read, I/O size distribution — Tables 5 and 6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import dwrf
+from repro.core.schema import ColumnBatch
+from repro.core.tectonic import IOStats, TectonicFS
+from repro.core.warehouse import PartitionMeta, Table
+
+COALESCE_WINDOW = int(1.25 * 1024 * 1024)   # §7.5
+
+
+@dataclasses.dataclass
+class ReadPlan:
+    extents: List[Tuple[int, int]]                      # (offset, len) I/Os
+    wanted: List[Tuple[int, int, dwrf.StreamInfo]]      # (stripe_idx, fid, stream)
+    bytes_wanted: int
+    bytes_planned: int
+
+    @property
+    def over_read_ratio(self) -> float:
+        return self.bytes_planned / max(self.bytes_wanted, 1)
+
+
+@dataclasses.dataclass
+class ReadResult:
+    batch: ColumnBatch
+    bytes_read: int
+    bytes_used: int
+    io_sizes: List[int]
+    feature_bytes: Dict[int, int]
+
+
+def plan_reads(
+    footer: dwrf.DwrfFooter,
+    feature_ids: Sequence[int],
+    coalesce_window: int = 0,
+    include_labels: bool = True,
+) -> ReadPlan:
+    """Build the extent list for a feature projection over one file."""
+    want_f = set(feature_ids)
+    wanted: List[Tuple[int, int, dwrf.StreamInfo]] = []
+    for si, stripe in enumerate(footer.stripes):
+        if footer.flattened:
+            for s in stripe.streams:
+                if s.fid in want_f or (include_labels and s.kind == "labels"):
+                    wanted.append((si, s.fid, s))
+        else:
+            # map encoding: must read the monolithic map (+ labels) streams
+            for s in stripe.streams:
+                wanted.append((si, s.fid, s))
+
+    streams = sorted((s for _, _, s in wanted), key=lambda s: s.offset)
+    bytes_wanted = sum(s.length for s in streams)
+
+    extents: List[Tuple[int, int]] = []
+    for s in streams:
+        if (
+            coalesce_window
+            and extents
+            and s.offset + s.length - extents[-1][0] <= coalesce_window
+        ):
+            off, ln = extents[-1]
+            extents[-1] = (off, max(ln, s.offset + s.length - off))
+        else:
+            extents.append((s.offset, s.length))
+    bytes_planned = sum(l for _, l in extents)
+    return ReadPlan(
+        extents=extents, wanted=wanted,
+        bytes_wanted=bytes_wanted, bytes_planned=bytes_planned,
+    )
+
+
+class TableReader:
+    """Reads a feature projection from a table's partitions with accounting."""
+
+    def __init__(
+        self,
+        table: Table,
+        feature_ids: Sequence[int],
+        coalesce_window: int = COALESCE_WINDOW,
+        record_popularity: bool = True,
+    ):
+        self.table = table
+        self.feature_ids = list(feature_ids)
+        self.coalesce_window = coalesce_window
+        self.record_popularity = record_popularity
+        self._job_feature_bytes: Dict[int, float] = {}
+
+    def read_partition(
+        self, meta: PartitionMeta, row_limit: Optional[int] = None
+    ) -> ReadResult:
+        footer = meta.footer
+        plan = plan_reads(footer, self.feature_ids, self.coalesce_window)
+        blobs = self.table.fs.read_extents(meta.path, plan.extents)
+
+        # slice each wanted stream back out of its (possibly merged) extent
+        extent_map: List[Tuple[int, int, bytes]] = [
+            (off, ln, blob) for (off, ln), blob in zip(plan.extents, blobs)
+        ]
+        extent_offsets = np.array([e[0] for e in extent_map])
+
+        per_stripe: Dict[int, Dict[Tuple[int, str], bytes]] = {}
+        feature_bytes: Dict[int, int] = {}
+        for si, fid, s in plan.wanted:
+            ei = int(np.searchsorted(extent_offsets, s.offset, "right") - 1)
+            off0, _, blob = extent_map[ei]
+            raw = blob[s.offset - off0: s.offset - off0 + s.length]
+            per_stripe.setdefault(si, {})[(s.fid, s.kind)] = raw
+            if fid >= 0:
+                feature_bytes[fid] = feature_bytes.get(fid, 0) + s.length
+
+        from repro.core.schema import concat_batches
+
+        parts = []
+        for si in sorted(per_stripe):
+            stripe = footer.stripes[si]
+            parts.append(
+                dwrf.decode_stripe_features(stripe, per_stripe[si], self.feature_ids)
+            )
+            if row_limit and sum(p.num_rows for p in parts) >= row_limit:
+                break
+        batch = concat_batches(parts)
+        if row_limit:
+            batch = batch.slice_rows(0, min(row_limit, batch.num_rows))
+
+        for fid, nb in feature_bytes.items():
+            self._job_feature_bytes[fid] = self._job_feature_bytes.get(fid, 0) + nb
+
+        return ReadResult(
+            batch=batch,
+            bytes_read=plan.bytes_planned,
+            bytes_used=plan.bytes_wanted,
+            io_sizes=[l for _, l in plan.extents],
+            feature_bytes=feature_bytes,
+        )
+
+    def finish_job(self) -> None:
+        """Record this job's feature-read footprint into table popularity."""
+        if self.record_popularity and self._job_feature_bytes:
+            self.table.popularity.record_job(self._job_feature_bytes)
+            self._job_feature_bytes = {}
+
+    # -- dataset-level accounting (Tables 3 & 5) ----------------------------
+
+    def projection_stats(self, partitions: Optional[Sequence[int]] = None) -> Dict[str, float]:
+        metas = self.table.select_partitions(partitions)
+        bytes_total = sum(m.nbytes for m in metas)
+        bytes_used = 0
+        feats_total = len(self.table.schema.logged_ids)
+        for m in metas:
+            plan = plan_reads(m.footer, self.feature_ids, 0, include_labels=False)
+            bytes_used += plan.bytes_wanted
+        return {
+            "pct_features_used": 100.0 * len(self.feature_ids) / max(feats_total, 1),
+            "pct_bytes_used": 100.0 * bytes_used / max(bytes_total, 1),
+            "bytes_total": float(bytes_total),
+            "bytes_used": float(bytes_used),
+        }

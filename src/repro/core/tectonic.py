@@ -1,0 +1,195 @@
+"""Tectonic-like append-only distributed filesystem with a storage-node
+performance/power model.
+
+Files are split into fixed-size blocks (8 MB, the paper's chunk size),
+replicated 3x across storage nodes.  Reads are served by extents
+(offset, length); the node model charges seek + rotational + transfer time
+per I/O, which is what makes small coalesced-read experiments (Table 6,
+Table 12) reproduce the paper's HDD IOPS cliff.
+
+Media constants follow §7.1/§7.2: HDDs have an ~8x throughput-to-storage
+gap; SSD nodes give 326% IOPS/W at 9% capacity/W relative to HDD.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+BLOCK_BYTES = 8 * 1024 * 1024         # Tectonic chunk size (§7.5)
+REPLICATION = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class MediaSpec:
+    name: str
+    seek_ms: float                    # average positioning latency per I/O
+    transfer_MBps: float              # sequential bandwidth
+    capacity_TB: float
+    power_W: float
+
+    def io_time_s(self, nbytes: int) -> float:
+        return self.seek_ms / 1e3 + nbytes / (self.transfer_MBps * 1e6)
+
+    @property
+    def max_iops(self) -> float:
+        return 1e3 / self.seek_ms
+
+
+# Calibrated so SSD/HDD IOPS-per-watt = ~3.26x and capacity-per-watt = ~9%
+# of HDD (§7.2 figures), with plausible absolute magnitudes.
+HDD = MediaSpec(name="hdd", seek_ms=8.0, transfer_MBps=180.0, capacity_TB=18.0, power_W=8.0)
+SSD = MediaSpec(name="ssd", seek_ms=0.08, transfer_MBps=2800.0, capacity_TB=3.84, power_W=262.0)
+
+
+@dataclasses.dataclass
+class IOStats:
+    num_ios: int = 0
+    bytes_read: int = 0
+    seek_time_s: float = 0.0
+    transfer_time_s: float = 0.0
+    io_sizes: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def total_time_s(self) -> float:
+        return self.seek_time_s + self.transfer_time_s
+
+    def record(self, nbytes: int, media: MediaSpec) -> None:
+        self.num_ios += 1
+        self.bytes_read += nbytes
+        self.seek_time_s += media.seek_ms / 1e3
+        self.transfer_time_s += nbytes / (media.transfer_MBps * 1e6)
+        self.io_sizes.append(nbytes)
+
+    def merge(self, other: "IOStats") -> None:
+        self.num_ios += other.num_ios
+        self.bytes_read += other.bytes_read
+        self.seek_time_s += other.seek_time_s
+        self.transfer_time_s += other.transfer_time_s
+        self.io_sizes.extend(other.io_sizes)
+
+    def percentiles(self) -> Dict[str, float]:
+        if not self.io_sizes:
+            return {}
+        a = np.asarray(self.io_sizes)
+        return {
+            "mean": float(a.mean()),
+            "std": float(a.std()),
+            "p5": float(np.percentile(a, 5)),
+            "p25": float(np.percentile(a, 25)),
+            "p50": float(np.percentile(a, 50)),
+            "p75": float(np.percentile(a, 75)),
+            "p95": float(np.percentile(a, 95)),
+        }
+
+    @property
+    def effective_throughput_MBps(self) -> float:
+        t = self.total_time_s
+        return (self.bytes_read / 1e6 / t) if t > 0 else 0.0
+
+
+@dataclasses.dataclass
+class StorageNode:
+    node_id: int
+    media: MediaSpec
+    used_bytes: int = 0
+    stats: IOStats = dataclasses.field(default_factory=IOStats)
+
+    def read(self, nbytes: int) -> None:
+        self.stats.record(nbytes, self.media)
+
+
+@dataclasses.dataclass
+class _BlockRef:
+    node_ids: Tuple[int, ...]      # replica placements
+    data_off: int                  # offset into the file byte string
+
+
+class TectonicFS:
+    """In-memory append-only FS with byte-accurate files + an I/O cost model."""
+
+    def __init__(self, num_nodes: int = 12, media: MediaSpec = HDD, seed: int = 0):
+        self.nodes = [StorageNode(i, media) for i in range(num_nodes)]
+        self.media = media
+        self._files: Dict[str, bytes] = {}
+        self._blocks: Dict[str, List[_BlockRef]] = {}
+        self._rng = np.random.default_rng(seed)
+        self.stats = IOStats()
+
+    # -- write path ---------------------------------------------------------
+
+    def create(self, path: str, data: bytes) -> None:
+        assert path not in self._files, f"append-only: {path} exists"
+        self._files[path] = data
+        refs = []
+        for off in range(0, max(len(data), 1), BLOCK_BYTES):
+            nodes = tuple(
+                int(i) for i in self._rng.choice(len(self.nodes), REPLICATION, replace=False)
+            )
+            refs.append(_BlockRef(node_ids=nodes, data_off=off))
+            for nid in nodes:
+                self.nodes[nid].used_bytes += min(BLOCK_BYTES, len(data) - off)
+        self._blocks[path] = refs
+
+    def append(self, path: str, data: bytes) -> None:
+        base = self._files.get(path, b"")
+        self._files.pop(path, None)
+        self._blocks.pop(path, None)
+        self.create(path, base + data)
+
+    def exists(self, path: str) -> bool:
+        return path in self._files
+
+    def size(self, path: str) -> int:
+        return len(self._files[path])
+
+    def list(self) -> List[str]:
+        return sorted(self._files)
+
+    @property
+    def used_bytes(self) -> int:
+        return sum(len(d) for d in self._files.values())
+
+    # -- read path ----------------------------------------------------------
+
+    def read_extents(
+        self, path: str, extents: Sequence[Tuple[int, int]]
+    ) -> List[bytes]:
+        """Read (offset, length) extents; each extent is one I/O charged to
+        the primary replica node of its first block."""
+        data = self._files[path]
+        refs = self._blocks[path]
+        out = []
+        for off, length in extents:
+            assert off + length <= len(data), (off, length, len(data))
+            block_idx = off // BLOCK_BYTES
+            node = self.nodes[refs[min(block_idx, len(refs) - 1)].node_ids[0]]
+            node.read(length)
+            self.stats.record(length, node.media)
+            out.append(data[off: off + length])
+        return out
+
+    def read_all(self, path: str) -> bytes:
+        return self.read_extents(path, [(0, len(self._files[path]))])[0]
+
+    # -- fleet metrics (Fig. 1 / §7.1 style) --------------------------------
+
+    def reset_stats(self) -> None:
+        self.stats = IOStats()
+        for n in self.nodes:
+            n.stats = IOStats()
+
+    def power_W(self) -> float:
+        return sum(n.media.power_W for n in self.nodes)
+
+    def throughput_to_storage_gap(self, demand_MBps: float) -> float:
+        """How many x more capacity we must provision to meet IOPS demand
+        (the paper's ~8x observation for HDD)."""
+        per_node_MBps = self.media.transfer_MBps
+        nodes_for_bw = demand_MBps / per_node_MBps
+        bytes_needed = self.used_bytes * REPLICATION
+        nodes_for_cap = bytes_needed / (self.media.capacity_TB * 1e12)
+        if nodes_for_cap == 0:
+            return 0.0
+        return nodes_for_bw / nodes_for_cap

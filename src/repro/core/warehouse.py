@@ -1,0 +1,97 @@
+"""Hive-like data warehouse: partitioned tables of DWRF files on Tectonic.
+
+Training jobs filter along two dimensions (§5.1): a set of partitions
+(row filter) and a feature projection (column filter).  The warehouse also
+maintains the feature-popularity statistics that drive feature reordering.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import dwrf
+from repro.core.datagen import DataGenConfig, generate_partition
+from repro.core.popularity import PopularityTracker
+from repro.core.schema import ColumnBatch, TableSchema
+from repro.core.tectonic import TectonicFS
+
+
+@dataclasses.dataclass
+class PartitionMeta:
+    index: int
+    path: str
+    num_rows: int
+    nbytes: int
+    footer: dwrf.DwrfFooter
+
+
+class Table:
+    def __init__(self, name: str, schema: TableSchema, fs: TectonicFS):
+        self.name = name
+        self.schema = schema
+        self.fs = fs
+        self.partitions: Dict[int, PartitionMeta] = {}
+        self.popularity = PopularityTracker()
+
+    def write_partition(
+        self,
+        index: int,
+        batch: ColumnBatch,
+        opts: Optional[dwrf.DwrfWriterOptions] = None,
+    ) -> PartitionMeta:
+        opts = opts or dwrf.DwrfWriterOptions()
+        if opts.feature_order is None and self.popularity.total_reads > 0:
+            # feature reordering: order streams by recent read popularity
+            opts = dataclasses.replace(
+                opts, feature_order=self.popularity.feature_order()
+            )
+        f = dwrf.write_dwrf(batch, opts)
+        path = f"warehouse/{self.name}/part-{index:05d}.dwrf"
+        self.fs.create(path, f.data)
+        meta = PartitionMeta(
+            index=index, path=path, num_rows=batch.num_rows,
+            nbytes=f.nbytes, footer=f.footer,
+        )
+        self.partitions[index] = meta
+        return meta
+
+    def generate(
+        self,
+        n_partitions: int,
+        gen_cfg: Optional[DataGenConfig] = None,
+        opts: Optional[dwrf.DwrfWriterOptions] = None,
+    ) -> None:
+        gen_cfg = gen_cfg or DataGenConfig()
+        for p in range(n_partitions):
+            self.write_partition(p, generate_partition(self.schema, p, gen_cfg), opts)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(m.nbytes for m in self.partitions.values())
+
+    @property
+    def total_rows(self) -> int:
+        return sum(m.num_rows for m in self.partitions.values())
+
+    def select_partitions(self, indices: Optional[Sequence[int]] = None) -> List[PartitionMeta]:
+        if indices is None:
+            return [self.partitions[i] for i in sorted(self.partitions)]
+        return [self.partitions[i] for i in indices]
+
+
+class Warehouse:
+    """A region's central warehouse: many models' tables on shared storage."""
+
+    def __init__(self, fs: Optional[TectonicFS] = None):
+        self.fs = fs or TectonicFS()
+        self.tables: Dict[str, Table] = {}
+
+    def create_table(self, schema: TableSchema) -> Table:
+        t = Table(schema.name, schema, self.fs)
+        self.tables[schema.name] = t
+        return t
+
+    def table(self, name: str) -> Table:
+        return self.tables[name]

@@ -1,0 +1,8 @@
+from repro.distributed.sharding import (
+    AxisRules,
+    TRAIN_RULES,
+    SERVE_RULES,
+    logical_to_spec,
+    spec_tree,
+    shard_tree,
+)

@@ -1,0 +1,46 @@
+"""Ambient sharding context: lets pure model code apply logical-axis
+sharding constraints without threading (mesh, rules) through every call.
+
+``steps.py`` activates the context when building a step; under no context
+(smoke tests on one device) ``constrain`` is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.distributed.sharding import AxisRules, logical_to_spec
+
+_CTX: contextvars.ContextVar[Optional[Tuple[Mesh, AxisRules]]] = contextvars.ContextVar(
+    "sharding_ctx", default=None
+)
+
+
+@contextlib.contextmanager
+def sharding_context(mesh: Mesh, rules: AxisRules):
+    token = _CTX.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def current_context() -> Optional[Tuple[Mesh, AxisRules]]:
+    return _CTX.get()
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[Optional[str]]) -> jax.Array:
+    """Apply a sharding constraint derived from logical axis names (no-op
+    outside a sharding context or on rank mismatch)."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if len(logical_axes) != x.ndim:
+        return x
+    spec = logical_to_spec(logical_axes, rules, mesh, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,197 @@
+"""Logical-axis sharding: map named tensor axes onto physical mesh axes.
+
+The framework annotates every parameter / activation with *logical* axis
+names ("embed", "heads", "mlp", "expert", ...).  A rule table maps logical
+names to mesh axes ("pod", "data", "model").  This is the MaxText-style
+indirection that lets one model definition serve DP / FSDP / TP / EP / SP
+layouts on both the single-pod (16, 16) and multi-pod (2, 16, 16) meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxis = Union[str, Sequence[str], None]
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Mapping of logical axis name -> mesh axis (or tuple of mesh axes)."""
+
+    rules: Mapping[str, MeshAxis]
+
+    def mesh_axes(self, logical: str, mesh: Optional[Mesh] = None) -> MeshAxis:
+        ax = self.rules.get(logical)
+        if ax is None:
+            return None
+        if mesh is not None:
+            # Drop mesh axes that do not exist on this mesh (e.g. "pod" on a
+            # single-pod mesh) so one rule table serves both meshes.
+            names = set(mesh.axis_names)
+            if isinstance(ax, str):
+                return ax if ax in names else None
+            kept = tuple(a for a in ax if a in names)
+            if not kept:
+                return None
+            return kept[0] if len(kept) == 1 else kept
+
+        return ax
+
+    def replace(self, **updates: MeshAxis) -> "AxisRules":
+        merged = dict(self.rules)
+        merged.update(updates)
+        return AxisRules(merged)
+
+
+# Default rule tables.  "embed" is FSDP-sharded over the data axis during
+# training (ZeRO-3 style: XLA inserts per-layer all-gathers inside the layer
+# scan, overlapping them with compute); it is *replicated* for serving where
+# latency matters more than memory.
+TRAIN_RULES = AxisRules(
+    {
+        "batch": ("pod", "data"),
+        "embed": "data",          # FSDP axis for parameters
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "expert": "model",
+        "ssm_heads": "model",
+        "seq": None,
+        "seq_sp": "model",        # Megatron sequence parallelism: residual
+                                  # stream sharded over model between matmuls
+        "kv_seq": None,
+        "expert_capacity": "data",
+        "stack": None,            # scan-over-layers dim, never sharded
+    }
+)
+
+# FSDP-heavy profile for small models on a big mesh: the model axis carries
+# parameter shards + batch, not tensor-parallel compute — eliminating the
+# per-layer activation all-reduces that dominate TP-16 for <=10B models
+# (EXPERIMENTS.md §Perf H1).
+FSDP_RULES = AxisRules(
+    {
+        "batch": ("pod", "data", "model"),
+        "embed": ("data", "model"),
+        "vocab": None,
+        "heads": None,
+        "kv_heads": None,
+        "mlp": None,
+        "expert": "model",
+        "ssm_heads": None,
+        "seq": None,
+        "seq_sp": None,           # model axis already carries batch
+        "kv_seq": None,
+        "expert_capacity": "data",
+        "stack": None,
+    }
+)
+
+SERVE_RULES = AxisRules(
+    {
+        "batch": ("pod", "data"),
+        "embed": None,            # replicate params over data for serving
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "expert": "model",
+        "ssm_heads": "model",
+        "seq": None,
+        "seq_sp": "model",        # sequence parallelism for prefill
+                                  # (no-op for decode: seq dim is 1)
+        "kv_seq": "model",        # sequence-parallel KV cache for decode
+        "expert_capacity": "data",
+        "stack": None,
+    }
+)
+
+
+def _divisible(dim: int, ax: MeshAxis, mesh: Mesh) -> bool:
+    if ax is None:
+        return True
+    axes = (ax,) if isinstance(ax, str) else tuple(ax)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return dim % n == 0
+
+
+def logical_to_spec(
+    logical_axes: Sequence[Optional[str]],
+    rules: AxisRules,
+    mesh: Mesh,
+    shape: Optional[Sequence[int]] = None,
+) -> P:
+    """Build a PartitionSpec from per-dimension logical axis names.
+
+    Any mesh axis may appear at most once in a PartitionSpec; later logical
+    axes that would reuse an already-consumed mesh axis fall back to
+    replication.  Dimensions not divisible by the mesh-axis size are also
+    replicated (e.g. kv_heads=8 on a 16-way model axis).
+    """
+    used: set = set()
+    out = []
+    for i, name in enumerate(logical_axes):
+        ax = rules.mesh_axes(name, mesh) if name else None
+        if ax is None:
+            out.append(None)
+            continue
+        axes = tuple(a for a in ((ax,) if isinstance(ax, str) else tuple(ax))
+                     if a not in used)
+        # longest prefix of the requested mesh axes that divides the dim
+        # (e.g. batch=(data,model) degrades to (data,) for small batches)
+        while axes and shape is not None and not _divisible(shape[i], axes, mesh):
+            axes = axes[:-1]
+        if not axes:
+            out.append(None)
+            continue
+        used.update(axes)
+        out.append(axes[0] if len(axes) == 1 else axes)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def named_sharding(
+    logical_axes: Sequence[Optional[str]],
+    rules: AxisRules,
+    mesh: Mesh,
+    shape: Optional[Sequence[int]] = None,
+) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(logical_axes, rules, mesh, shape))
+
+
+def spec_tree(logical_tree: Any, rules: AxisRules, mesh: Mesh, shape_tree: Any = None) -> Any:
+    """Map a pytree of logical-axes tuples to a pytree of PartitionSpecs."""
+    if shape_tree is None:
+        return jax.tree.map(
+            lambda la: logical_to_spec(la, rules, mesh),
+            logical_tree,
+            is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x),
+        )
+    return jax.tree.map(
+        lambda la, sh: logical_to_spec(la, rules, mesh, sh),
+        logical_tree,
+        shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def shard_tree(tree: Any, spec_tree_: Any, mesh: Mesh) -> Any:
+    """Device-put a pytree according to a PartitionSpec pytree."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), tree, spec_tree_
+    )
+
+
+def with_logical(x: jax.Array, logical_axes: Sequence[Optional[str]], rules: AxisRules, mesh: Optional[Mesh]) -> jax.Array:
+    """Apply a sharding constraint derived from logical axes (no-op if no mesh)."""
+    if mesh is None:
+        return x
+    spec = logical_to_spec(logical_axes, rules, mesh, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: pooled embedding-bag (DLRM's hot sparse op).
+
+TPU adaptation of the GPU gather: the grid walks (batch_tile, bag_slot);
+for each slot the scalar-prefetched ids pick the embedding-table block to
+stream into VMEM (BlockSpec index_map reads the prefetch ref), and the
+output tile accumulates mask-weighted rows across the L bag slots — a
+gather expressed as data-dependent block scheduling instead of
+random-access loads.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, mask_ref, table_row_ref, out_ref, denom_ref):
+    l = pl.program_id(1)
+    n_l = pl.num_programs(1)
+
+    @pl.when(l == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+        denom_ref[...] = jnp.zeros_like(denom_ref)
+
+    m = mask_ref[0, l]                                 # scalar f32
+    out_ref[...] += table_row_ref[...] * m
+    denom_ref[...] += m
+
+    @pl.when(l == n_l - 1)
+    def _finish():
+        out_ref[...] = out_ref[...] / jnp.maximum(denom_ref[...], 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag(
+    table: jax.Array,     # (V, E) f32
+    ids: jax.Array,       # (B, L) int32
+    mask: jax.Array,      # (B, L) f32
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Mean-pooled bag: out[b] = sum_l mask[b,l] * table[ids[b,l]] / sum(mask)."""
+    v, e = table.shape
+    b, l = ids.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, l),
+        in_specs=[
+            pl.BlockSpec((1, l), lambda i, j, ids_p: (i, 0)),        # mask row
+            pl.BlockSpec((1, e), lambda i, j, ids_p: (ids_p[i, j], 0)),  # table row
+        ],
+        out_specs=[
+            pl.BlockSpec((1, e), lambda i, j, ids_p: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, ids_p: (i, 0)),
+        ],
+    )
+    out, _ = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, e), table.dtype),
+            jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(ids, mask.astype(jnp.float32), table)
+    return out

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: flash attention forward (trainer-side hot op).
+
+Grid (batch*heads, q_blocks, k_blocks); the innermost k dimension is
+sequential on TPU, so the online-softmax (m, l, acc) state lives in the
+output block + VMEM scratch carried across k steps.  Block sizes default to
+MXU-aligned (128, 128).  The XLA custom-VJP path in
+``repro.models.attention`` is the portable equivalent used for dry-runs.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _kernel(q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref, *, scale, causal, block_q, block_k):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    n_k = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                     # (bq, d)
+    k = k_ref[0]                                     # (bk, d)
+    v = v_ref[0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(kj == n_k - 1)
+    def _finish():
+        out_ref[0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jax.Array,     # (B, H, S, D)
+    k: jax.Array,     # (B, H, T, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, s, d = q.shape
+    t = k.shape[2]
+    bq = min(block_q, s)
+    bk = min(block_k, t)
+    scale = 1.0 / math.sqrt(d)
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, t, d)
+    vf = v.reshape(b * h, t, d)
+    grid = (b * h, pl.cdiv(s, bq), pl.cdiv(t, bk))
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, causal=causal, block_q=bq, block_k=bk
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # m
+            pltpu.VMEM((bq, 1), jnp.float32),    # l
+            pltpu.VMEM((bq, d), jnp.float32),    # acc
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)

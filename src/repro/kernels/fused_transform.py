@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: fused multi-feature transform — the §7.2 flagship.
+
+The paper observed ~3 orders of magnitude speedup from applying one kernel
+to a tensor combining 1000 sparse features versus launching per-feature
+kernels.  The TPU-native version packs features into the 128-lane minor
+dimension of an int32 tile; per-feature op codes and parameters ride along
+as (1, features) rows, and a single pallas_call applies
+hash/modulus/clamp/bucketize across every feature column — kernel-launch
+amortization replaced by VMEM-tile batching.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.sigrid_hash import _hash_u32
+
+OP_IDENTITY = 0
+OP_SIGRID_HASH = 1
+OP_POSITIVE_MODULUS = 2
+OP_CLAMP = 3
+OP_BUCKETIZE = 4
+
+
+def _kernel(ids_ref, code_ref, p0_ref, p1_ref, out_ref):
+    ids = ids_ref[...]                             # (br, bc) i32
+    code = code_ref[...][0][None, :]               # (1, bc) -> broadcast
+    p0 = p0_ref[...][0][None, :]
+    p1 = p1_ref[...][0][None, :]
+
+    h = _hash_u32(ids.astype(jnp.uint32) ^ p0.astype(jnp.uint32))
+    out_hash = (h % jnp.maximum(p1.astype(jnp.uint32), 1)).astype(jnp.int32)
+    m = jnp.maximum(p1, 1)
+    out_mod = jnp.mod(jnp.mod(ids, m) + m, m)
+    out_clamp = jnp.clip(ids, p0, p1)
+    scale = jnp.maximum(p1, 1)
+    out_bucket = jnp.clip((ids - p0) // scale, 0, 255)
+
+    out = jnp.where(code == OP_SIGRID_HASH, out_hash, ids)
+    out = jnp.where(code == OP_POSITIVE_MODULUS, out_mod, out)
+    out = jnp.where(code == OP_CLAMP, out_clamp, out)
+    out = jnp.where(code == OP_BUCKETIZE, out_bucket, out)
+    out_ref[...] = out.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "block_cols", "interpret")
+)
+def fused_transform(
+    ids: jax.Array,          # (rows, features) int32
+    op_codes: jax.Array,     # (features,) int32
+    param0: jax.Array,       # (features,) int32
+    param1: jax.Array,       # (features,) int32
+    *,
+    block_rows: int = 256,
+    block_cols: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    rows, feats = ids.shape
+    br = min(block_rows, rows)
+    bc = min(block_cols, feats)
+    grid = (pl.cdiv(rows, br), pl.cdiv(feats, bc))
+    row = lambda a: a.reshape(1, feats).astype(jnp.int32)
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pl.GridSpec(
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+                pl.BlockSpec((1, bc), lambda i, j: (0, j)),
+                pl.BlockSpec((1, bc), lambda i, j: (0, j)),
+                pl.BlockSpec((1, bc), lambda i, j: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((rows, feats), jnp.int32),
+        interpret=interpret,
+    )(ids, row(op_codes), row(param0), row(param1))

@@ -1,0 +1,63 @@
+"""Public kernel API: jit'd wrappers that pick the Pallas TPU kernel on TPU
+and fall back to interpret mode (CPU validation) or the jnp oracle."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bucketize import bucketize as _bucketize_pallas
+from repro.kernels.embedding_bag import embedding_bag as _embag_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.fused_transform import fused_transform as _fused_pallas
+from repro.kernels.sigrid_hash import sigrid_hash as _sigrid_pallas
+from repro.kernels.ssd_chunk import ssd_chunk_forward as _ssd_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def sigrid_hash(ids, salt: int, max_value: int, *, use_pallas: Optional[bool] = None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return _sigrid_pallas(ids, salt, max_value, interpret=not _on_tpu())
+    return ref.sigrid_hash(ids, salt, max_value)
+
+
+def bucketize(values, borders, *, use_pallas: Optional[bool] = None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return _bucketize_pallas(values, borders, interpret=not _on_tpu())
+    return ref.bucketize(values, borders)
+
+
+def fused_transform(ids, op_codes, param0, param1, *, use_pallas: Optional[bool] = None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return _fused_pallas(ids, op_codes, param0, param1, interpret=not _on_tpu())
+    return ref.fused_transform(ids, op_codes, param0, param1)
+
+
+def embedding_bag(table, ids, mask, *, use_pallas: Optional[bool] = None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return _embag_pallas(table, ids, mask, interpret=not _on_tpu())
+    return ref.embedding_bag(table, ids, mask)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, use_pallas: Optional[bool] = None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return _flash_pallas(q, k, v, causal=causal, interpret=not _on_tpu())
+    return ref.flash_attention(q, k, v, causal=causal)
+
+
+def ssd_chunk_forward(x, dt, a, b_, c_, *, chunk: int = 256,
+                      use_pallas: Optional[bool] = None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return _ssd_pallas(x, dt, a, b_, c_, chunk=chunk, interpret=not _on_tpu())
+    return ref.ssd_chunk_forward(x, dt, a, b_, c_)

@@ -1,0 +1,118 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _mix64(x: jax.Array) -> jax.Array:
+    """splitmix64-style mixer on uint32 pairs (TPU-friendly 32-bit lanes).
+
+    We operate on uint32 (TPU vector lanes are 32-bit); the hash is a pair of
+    multiply-xor-shift rounds — identical math in kernel and oracle.
+    """
+    x = x.astype(jnp.uint32)
+    x ^= x >> 16
+    x = x * jnp.uint32(0x7FEB352D)
+    x ^= x >> 15
+    x = x * jnp.uint32(0x846CA68B)
+    x ^= x >> 16
+    return x
+
+
+def sigrid_hash(ids: jax.Array, salt: int, max_value: int) -> jax.Array:
+    """ids: int32 (any shape) -> hashed ids in [0, max_value), int32."""
+    h = _mix64(ids.astype(jnp.uint32) ^ jnp.uint32(salt))
+    return (h % jnp.uint32(max_value)).astype(jnp.int32)
+
+
+def bucketize(values: jax.Array, borders: jax.Array) -> jax.Array:
+    """values: f32 (any shape); borders: (nb,) sorted -> bucket idx int32."""
+    return jnp.sum(
+        values[..., None] >= borders, axis=-1, dtype=jnp.int32
+    )
+
+
+# fused multi-feature transform op codes
+OP_IDENTITY = 0
+OP_SIGRID_HASH = 1
+OP_POSITIVE_MODULUS = 2
+OP_CLAMP = 3
+OP_BUCKETIZE = 4
+
+
+def fused_transform(
+    ids: jax.Array,        # (rows, features) int32 packed feature matrix
+    op_codes: jax.Array,   # (features,) int32
+    param0: jax.Array,     # (features,) int32  (salt / modulus / lo / n_borders)
+    param1: jax.Array,     # (features,) int32  (max_value / hi / border_scale)
+) -> jax.Array:
+    """Apply a per-feature op across a packed (rows, features) tile — the
+    paper's 'combine 1000 features into one kernel' insight (§7.2)."""
+    h = _mix64(ids.astype(jnp.uint32) ^ param0[None, :].astype(jnp.uint32))
+    out_hash = (h % jnp.maximum(param1[None, :].astype(jnp.uint32), 1)).astype(jnp.int32)
+    m = jnp.maximum(param1[None, :], 1)
+    out_mod = jnp.mod(jnp.mod(ids, m) + m, m)
+    out_clamp = jnp.clip(ids, param0[None, :], param1[None, :])
+    # bucketize against a linear grid: idx = clip(floor((v - lo)/scale), 0, n)
+    scale = jnp.maximum(param1[None, :], 1)
+    out_bucket = jnp.clip((ids - param0[None, :]) // scale, 0, 255)
+    code = op_codes[None, :]
+    out = jnp.where(code == OP_SIGRID_HASH, out_hash, ids)
+    out = jnp.where(code == OP_POSITIVE_MODULUS, out_mod, out)
+    out = jnp.where(code == OP_CLAMP, out_clamp, out)
+    out = jnp.where(code == OP_BUCKETIZE, out_bucket, out)
+    return out.astype(jnp.int32)
+
+
+def embedding_bag(
+    table: jax.Array,       # (V, E) f32
+    ids: jax.Array,         # (B, L) int32
+    mask: jax.Array,        # (B, L) f32
+) -> jax.Array:
+    """Mean-pooled embedding bag -> (B, E)."""
+    emb = jnp.take(table, ids, axis=0)                  # (B, L, E)
+    s = jnp.sum(emb * mask[..., None], axis=1)
+    denom = jnp.maximum(jnp.sum(mask, axis=1), 1.0)
+    return s / denom[:, None]
+
+
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True
+) -> jax.Array:
+    """q,k,v: (B, H, S, D) -> (B, H, S, D); fp32 softmax."""
+    d = q.shape[-1]
+    sc = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) / jnp.sqrt(d)
+    if causal:
+        s, t = q.shape[2], k.shape[2]
+        mask = jnp.arange(s)[:, None] >= jnp.arange(t)[None, :]
+        sc = jnp.where(mask, sc, -2.0e38)
+    p = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def ssd_chunk_forward(x, dt, a, b_, c_):
+    """SSD recurrence oracle, sequential over time.
+
+    x: (BH, S, P); dt: (BH, S); a: (BH,); b_, c_: (BH, S, N)."""
+    bh, s, p = x.shape
+    n = b_.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                      # (BH,P),(BH,),(BH,N),(BH,N)
+        da = jnp.exp(dtt * a)                      # (BH,)
+        state = state * da[:, None, None] + jnp.einsum(
+            "bn,bp,b->bnp", bt, xt, dtt
+        )
+        y = jnp.einsum("bnp,bn->bp", state, ct)
+        return state, y
+
+    state0 = jnp.zeros((bh, n, p), jnp.float32)
+    xs = (
+        x.swapaxes(0, 1).astype(jnp.float32),
+        dt.swapaxes(0, 1).astype(jnp.float32),
+        b_.swapaxes(0, 1).astype(jnp.float32),
+        c_.swapaxes(0, 1).astype(jnp.float32),
+    )
+    _, ys = jax.lax.scan(step, state0, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype)

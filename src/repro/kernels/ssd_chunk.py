@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked forward.
+
+The SSM-trainer hot spot: per (batch·head, chunk) grid cell, the kernel
+computes the intra-chunk quadratic contribution ((C·Bᵀ) ∘ L) x on the MXU,
+adds the inter-chunk carried-state contribution, and updates the running
+(P, N) state in VMEM scratch — the state never round-trips to HBM between
+chunks (the XLA scan carries it through HBM every chunk).  Grid order on
+TPU is row-major with the chunk dim innermost, so the scratch carry across
+chunks is sequential per (batch, head), mirroring the flash-attention
+pattern.
+
+Layout: heads ride the leading grid dim (one head per cell keeps every
+block 2D and MXU-aligned for P, N in {64, 128}).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *, q: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0]                                   # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)             # (1, Q) row
+    a = a_ref[0, 0].astype(jnp.float32)            # scalar A (negative)
+    bv = b_ref[0]                                  # (Q, N)
+    cv = c_ref[0]                                  # (Q, N)
+
+    da = dt[0] * a                                 # (Q,)
+    cs = jnp.cumsum(da)                            # (Q,)
+    seg = cs[:, None] - cs[None, :]                # (Q, Q)
+    causal = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    L = jnp.exp(jnp.where(causal, seg, -1e30))
+
+    cb = jnp.dot(cv, bv.T, preferred_element_type=jnp.float32)   # (Q, Q)
+    m = cb * L * dt[0][None, :]
+    y_intra = jnp.dot(m.astype(x.dtype), x, preferred_element_type=jnp.float32)
+
+    state = state_ref[...]                         # (N, P) f32
+    y_inter = jnp.dot(
+        (cv.astype(jnp.float32) * jnp.exp(cs)[:, None]), state,
+        preferred_element_type=jnp.float32,
+    )                                              # (Q, P)
+
+    decay_out = jnp.exp(cs[-1] - cs)               # (Q,)
+    dstate = jnp.dot(
+        (bv.astype(jnp.float32) * (dt[0] * decay_out)[:, None]).T,
+        x.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )                                              # (N, P)
+    state_ref[...] = jnp.exp(cs[-1]) * state + dstate
+
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunk_forward(
+    x: jax.Array,      # (BH, S, P) — batch*heads flattened
+    dt: jax.Array,     # (BH, S) post-softplus
+    a: jax.Array,      # (BH,) negative decay per head
+    b_: jax.Array,     # (BH, S, N)
+    c_: jax.Array,     # (BH, S, N)
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns y (BH, S, P) = SSD(x, dt, A, B, C) with zero initial state."""
+    bh, s, p = x.shape
+    n = b_.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+    grid = (bh, nc)
+    return pl.pallas_call(
+        functools.partial(_kernel, q=q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q, p), lambda g, c: (g, c, 0)),
+            pl.BlockSpec((1, 1, q), lambda g, c: (g, 0, c)),
+            pl.BlockSpec((1, 1), lambda g, c: (g, 0)),
+            pl.BlockSpec((1, q, n), lambda g, c: (g, c, 0)),
+            pl.BlockSpec((1, q, n), lambda g, c: (g, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, p), lambda g, c: (g, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt.reshape(bh, 1, s), a.reshape(bh, 1), b_, c_)

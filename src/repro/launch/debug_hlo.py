@@ -1,0 +1,114 @@
+"""Debug tool: attribute analyzer bytes / flops / collectives to HLO sites.
+
+Usage:
+  XLA_FLAGS=... python -m repro.launch.debug_hlo <hlo.txt>
+or programmatically via ``attribute(text)``.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from typing import Dict, List, Tuple
+
+from repro.launch.hlo_analysis import (
+    Computation,
+    Op,
+    _BODY_RE,
+    _CALLS_RE,
+    _COLLECTIVES,
+    _COND_RE,
+    _CONTRACT_RE,
+    _FREE_OPCODES,
+    _GROUPS_IOTA_RE,
+    _GROUPS_LIST_RE,
+    _MEM_OPCODES,
+    _OPERAND_RE,
+    _TRIP_RE,
+    _collective_wire,
+    _dot_flops,
+    _group_size,
+    _shape_bytes,
+    parse_module,
+)
+
+
+def attribute(text: str):
+    comps = parse_module(text)
+    entry = [c for c in comps.values() if c.is_entry][0]
+    bytes_by_site: Dict[str, float] = {}
+    wire_by_site: Dict[str, float] = {}
+    flops_by_site: Dict[str, float] = {}
+
+    def op_meta(op: Op) -> str:
+        m = re.search(r'op_name="([^"]*)"', op.rest)
+        tail = "/".join(m.group(1).split("/")[-3:]) if m else "?"
+        return f"{op.opcode}:{tail}"
+
+    def _op_bytes(op, comp):
+        result = _shape_bytes(op.type_str)
+        if op.opcode in ("dynamic-slice", "gather", "slice"):
+            return 2.0 * result
+        if op.opcode == "dynamic-update-slice":
+            operands = _OPERAND_RE.findall(
+                op.rest[: op.rest.index(")")] if ")" in op.rest else op.rest
+            )
+            upd = _shape_bytes(comp.symbols.get(operands[1], "")) if len(operands) > 1 else 0
+            return 2.0 * upd
+        if op.opcode in ("broadcast", "iota"):
+            return float(result)
+        nbytes = float(result)
+        for o in _OPERAND_RE.findall(
+            op.rest[: op.rest.index(")")] if ")" in op.rest else op.rest
+        ):
+            t = comp.symbols.get(o)
+            if t:
+                nbytes += _shape_bytes(t)
+        return nbytes
+
+    def walk(name: str, mult: float, fused: bool, depth: int = 0):
+        comp = comps.get(name)
+        if comp is None or depth > 64:
+            return
+        for op in comp.ops:
+            if op.opcode in _FREE_OPCODES:
+                continue
+            if op.opcode == "while":
+                tm = _TRIP_RE.search(op.rest)
+                trip = int(tm.group(1)) if tm else 1
+                bm = _BODY_RE.search(op.rest)
+                if bm:
+                    walk(bm.group(1), mult * trip, fused, depth + 1)
+                continue
+            if op.opcode in ("fusion", "call", "conditional"):
+                for sub in _CALLS_RE.findall(op.rest):
+                    walk(sub, mult, fused or op.opcode == "fusion", depth + 1)
+            if op.opcode == "dot":
+                flops_by_site[op_meta(op)] = (
+                    flops_by_site.get(op_meta(op), 0)
+                    + _dot_flops(op, comp.symbols) * mult
+                )
+            base = op.opcode.replace("-start", "")
+            if base in _COLLECTIVES:
+                nb = _shape_bytes(op.type_str)
+                g = _group_size(op.rest)
+                key = f"{op_meta(op)} g={g} {op.type_str[:44]}"
+                wire_by_site[key] = wire_by_site.get(key, 0) + _collective_wire(base, nb, g) * mult
+            if not fused and op.opcode in _MEM_OPCODES:
+                key = f"{op_meta(op)} {op.type_str[:44]}"
+                bytes_by_site[key] = bytes_by_site.get(key, 0) + _op_bytes(op, comp) * mult
+
+    walk(entry.name, 1.0, False)
+    return bytes_by_site, wire_by_site, flops_by_site
+
+
+def report(text: str, top: int = 15):
+    b, w, f = attribute(text)
+    for title, d in (("BYTES", b), ("WIRE", w), ("FLOPS", f)):
+        tot = sum(d.values()) or 1.0
+        print(f"== {title} total {tot:.4e}")
+        for k, v in sorted(d.items(), key=lambda kv: -kv[1])[:top]:
+            print(f"  {v:.3e} {v / tot * 100:5.1f}%  {k[:130]}")
+
+
+if __name__ == "__main__":
+    report(open(sys.argv[1]).read(), int(sys.argv[2]) if len(sys.argv) > 2 else 15)

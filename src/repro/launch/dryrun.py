@@ -1,0 +1,191 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the sharding config is coherent end-to-end
+(SPMD partitioning succeeds, no unsupported collectives, memory analysis
+available) and extracts the roofline terms via the trip-count-aware HLO
+analyzer.  Results append to an incremental JSONL so a crashed sweep
+resumes where it left off.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-405b --shape train_4k
+  python -m repro.launch.dryrun --all            # full sweep, both meshes
+  python -m repro.launch.dryrun --all --resume   # skip cells already done
+"""
+import argparse
+import gc
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro import configs as cfglib
+from repro.launch import mesh as meshlib
+from repro.launch import roofline as rl
+from repro.launch.hlo_analysis import analyze
+from repro.launch.steps import make_step
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun.jsonl")
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True) -> dict:
+    shape = cfglib.SHAPES[shape_name]
+    cfg = cfglib.get_config(arch)
+    mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "multi_pod": multi_pod,
+        "chips": chips,
+        "status": "running",
+    }
+    t0 = time.time()
+    try:
+        bundle = make_step(arch, shape_name, mesh)
+        lowered = bundle.lower()
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = None
+        try:
+            m = compiled.memory_analysis()
+            mem = {
+                "argument_bytes": m.argument_size_in_bytes,
+                "output_bytes": m.output_size_in_bytes,
+                "temp_bytes": m.temp_size_in_bytes,
+                "alias_bytes": m.alias_size_in_bytes,
+                "total_bytes_per_device": (
+                    m.argument_size_in_bytes + m.output_size_in_bytes
+                    + m.temp_size_in_bytes - m.alias_size_in_bytes
+                ),
+            }
+        except Exception as e:  # CPU backend may lack pieces
+            mem = {"error": str(e)}
+
+        xla_cost = {}
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            xla_cost = {
+                "flops_per_device_loopbody_once": float(ca.get("flops", 0.0)),
+                "bytes_per_device_loopbody_once": float(ca.get("bytes accessed", 0.0)),
+            }
+        except Exception as e:
+            xla_cost = {"error": str(e)}
+
+        hlo_text = compiled.as_text()
+        import jax.numpy as jnp
+        bf16 = getattr(cfg, "compute_dtype", None) == jnp.bfloat16
+        cost = analyze(hlo_text, bf16_activations=bf16)
+        model_flops = rl.model_flops_estimate(cfg, shape)
+        attn_flops = rl.attention_flops_estimate(cfg, shape)
+        terms = rl.RooflineTerms(
+            flops=cost.flops * chips,       # analyzer sees the per-device program
+            hbm_bytes=cost.bytes_accessed * chips,
+            wire_bytes_per_device=cost.wire_bytes,
+            chips=chips,
+            model_flops=model_flops,
+        )
+        rec.update(
+            {
+                "status": "ok",
+                "lower_s": round(t_lower, 2),
+                "compile_s": round(t_compile, 2),
+                "memory_analysis": mem,
+                "xla_cost_analysis": xla_cost,
+                "hlo_flops_per_device": cost.flops,
+                "hlo_bytes_per_device": cost.bytes_accessed,
+                "collectives": cost.collective_counts,
+                "wire_bytes_per_device": cost.wire_bytes,
+                "unknown_trip_loops": cost.unknown_trip_loops,
+                "model_flops": model_flops,
+                "attention_flops": attn_flops,
+                "roofline": terms.to_dict(),
+                "hlo_size_chars": len(hlo_text),
+                "dot_flops_top": dict(
+                    sorted(cost.dot_flops_by_meta.items(), key=lambda kv: -kv[1])[:8]
+                ),
+            }
+        )
+        del compiled, lowered, bundle, hlo_text
+    except Exception as e:
+        rec.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:]})
+    rec["wall_s"] = round(time.time() - t0, 2)
+    gc.collect()
+    if verbose:
+        brief = {k: rec.get(k) for k in ("arch", "shape", "mesh", "status", "wall_s")}
+        if rec["status"] == "ok":
+            brief["bottleneck"] = rec["roofline"]["bottleneck"]
+            brief["step_s"] = round(rec["roofline"]["step_time_s"], 4)
+        else:
+            brief["error"] = rec.get("error")
+        print(json.dumps(brief), flush=True)
+    return rec
+
+
+def all_cells():
+    for arch in cfglib.ARCH_IDS:
+        for shape_name in cfglib.SHAPES:
+            ok, why = cfglib.cell_supported(arch, shape_name)
+            for multi_pod in (False, True):
+                yield arch, shape_name, multi_pod, ok, why
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--out", default=RESULTS)
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+
+    done = set()
+    if args.resume and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("status") in ("ok", "skipped"):
+                        done.add((r["arch"], r["shape"], r["multi_pod"]))
+                except json.JSONDecodeError:
+                    pass
+
+    def emit(rec):
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+
+    if args.all:
+        n_err = 0
+        for arch, shape_name, multi_pod, ok, why in all_cells():
+            key = (arch, shape_name, multi_pod)
+            if key in done:
+                continue
+            if not ok:
+                emit({"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                      "status": "skipped", "reason": why})
+                continue
+            rec = run_cell(arch, shape_name, multi_pod)
+            emit(rec)
+            n_err += rec["status"] == "error"
+        return 1 if n_err else 0
+
+    rec = run_cell(args.arch, args.shape, args.multi_pod)
+    emit(rec)
+    return 0 if rec["status"] == "ok" else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,304 @@
+"""Trip-count-aware HLO cost analysis from compiled HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` counts while-loop bodies ONCE,
+ignoring trip counts — which undercounts a scan-over-layers model by ~the
+layer count (verified empirically; see EXPERIMENTS.md §Dry-run methodology).
+This module re-derives FLOPs / bytes-accessed / collective wire bytes by
+walking the computation call graph with loop-trip-count multipliers taken
+from each ``while`` op's ``known_trip_count`` backend config.
+
+Covered: dot (GEMM) flops, per-op bytes for memory-touching opcodes,
+ring-model collective wire bytes.  Validated against cost_analysis() on
+loop-free modules in tests/test_hlo_analysis.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0,
+}
+
+# one HLO shape like bf16[128,64]{1,0} or (tuple, of, shapes) — we parse the
+# flat pieces and sum.
+_SHAPE_PIECE_RE = re.compile(r"([a-z][a-z0-9]*)\[([\d,]*)\]")
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^()]*\)|[a-z][a-z0-9]*\[[\d,]*\](?:\{[^}]*\})?)\s*"
+    r"([\w\-]+)\((.*)$"
+)
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body|condition)=%([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+# opcodes whose operands/results count as HBM traffic at computation level
+_MEM_OPCODES = {
+    "fusion", "dot", "convolution", "copy", "all-gather", "all-reduce",
+    "reduce-scatter", "all-to-all", "collective-permute", "dynamic-slice",
+    "dynamic-update-slice", "reduce", "broadcast", "transpose", "reshape",
+    "concatenate", "slice", "pad", "gather", "scatter", "select", "sort",
+    "convert", "iota", "rng-bit-generator", "custom-call", "cholesky",
+    "triangular-solve", "reduce-window", "select-and-scatter", "exp", "add",
+    "multiply", "subtract", "divide", "maximum", "minimum", "tanh", "log",
+    "negate", "rsqrt", "sqrt", "power", "compare", "and", "or", "not",
+}
+_FREE_OPCODES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id",
+}
+
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+    "collective-permute-start",
+}
+
+
+def _shape_bytes(type_str: str, bf16_correction: bool = False) -> float:
+    """Byte size of an HLO type string (sums tuple elements).
+
+    bf16_correction: the XLA *CPU* backend promotes every bf16 dot (and its
+    operands/results) to f32 because CPUs lack native bf16 GEMMs.  The TPU
+    lowering of the same JAX program keeps those tensors bf16.  When the
+    model's compute dtype is bf16 we therefore halve the bytes of rank>=3
+    f32 tensors (activations); genuine f32 buffers in the program (norm
+    scales, optimizer moments, rank<=2 reductions) are unaffected.  See
+    EXPERIMENTS.md "Dry-run methodology".
+    """
+    total = 0.0
+    for m in _SHAPE_PIECE_RE.finditer(type_str):
+        dtype, dims = m.group(1), m.group(2)
+        dim_list = [int(d) for d in dims.split(",") if d]
+        n = 1
+        for d in dim_list:
+            n *= d
+        nb = n * _DTYPE_BYTES.get(dtype, 4)
+        if bf16_correction and dtype == "f32" and len(dim_list) >= 3:
+            nb *= 0.5
+        total += nb
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_PIECE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # operands + attributes tail (may span the rest of the line)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    ops: List[Op]
+    symbols: Dict[str, str]  # op name -> type str
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    entry_name = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if current is None:
+            hdr = _COMP_HDR_RE.match(stripped)
+            if hdr and stripped.endswith("{"):
+                current = Computation(
+                    name=hdr.group(2), is_entry=bool(hdr.group(1)), ops=[], symbols={}
+                )
+            continue
+        if stripped == "}":
+            comps[current.name] = current
+            if current.is_entry:
+                entry_name = current.name
+            current = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            op = Op(name=m.group(1), type_str=m.group(2), opcode=m.group(3), rest=m.group(4))
+            current.ops.append(op)
+            current.symbols[op.name] = op.type_str
+        elif stripped.startswith("%") and "parameter(" in stripped:
+            pm = re.match(r"%([\w.\-]+)\s*=\s*(\S+)\s+parameter", stripped)
+            if pm:
+                op = Op(pm.group(1), pm.group(2), "parameter", "")
+                current.ops.append(op)
+                current.symbols[op.name] = op.type_str
+    return comps
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    wire_bytes: float = 0.0            # per-device collective bytes (ring model)
+    collective_counts: Dict[str, float] = dataclasses.field(default_factory=dict)
+    dot_flops_by_meta: Dict[str, float] = dataclasses.field(default_factory=dict)
+    unknown_trip_loops: int = 0
+
+    def merge_scaled(self, other: "HloCost", mult: float) -> None:
+        self.flops += other.flops * mult
+        self.bytes_accessed += other.bytes_accessed * mult
+        self.wire_bytes += other.wire_bytes * mult
+        self.unknown_trip_loops += other.unknown_trip_loops
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] = self.collective_counts.get(k, 0) + v * mult
+        for k, v in other.dot_flops_by_meta.items():
+            self.dot_flops_by_meta[k] = self.dot_flops_by_meta.get(k, 0) + v * mult
+
+
+def _dot_flops(op: Op, symbols: Dict[str, str]) -> float:
+    result_elems = 1
+    for d in _shape_dims(op.type_str):
+        result_elems *= d
+    contract = _CONTRACT_RE.search(op.rest)
+    if not contract:
+        return 0.0
+    c_dims = [int(d) for d in contract.group(1).split(",") if d]
+    operands = _OPERAND_RE.findall(op.rest.split(")")[0])
+    if not operands:
+        return 0.0
+    lhs_type = symbols.get(operands[0])
+    if lhs_type is None:
+        return 2.0 * result_elems  # conservative fallback
+    lhs_dims = _shape_dims(lhs_type)
+    k = 1
+    for d in c_dims:
+        if d < len(lhs_dims):
+            k *= lhs_dims[d]
+    return 2.0 * result_elems * k
+
+
+def _group_size(rest: str, default: int = 1) -> int:
+    gm = _GROUPS_IOTA_RE.search(rest)
+    if gm:
+        return int(gm.group(2))
+    gm = _GROUPS_LIST_RE.search(rest)
+    if gm:
+        return len([x for x in gm.group(1).split(",") if x.strip()])
+    return default
+
+
+def _collective_wire(kind: str, nbytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    kind = kind.replace("-start", "")
+    if kind == "all-gather":
+        return nbytes * (g - 1) / g
+    if kind == "all-reduce":
+        return 2.0 * nbytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return nbytes * (g - 1)
+    if kind == "all-to-all":
+        return nbytes * (g - 1) / g
+    if kind == "collective-permute":
+        return float(nbytes)
+    return 0.0
+
+
+def analyze(text: str, default_trip: int = 1, bf16_activations: bool = False) -> HloCost:
+    comps = parse_module(text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return HloCost()
+    cache: Dict[str, HloCost] = {}
+
+    def _op_bytes(op: Op, comp: Computation) -> float:
+        """HBM bytes for one computation-level op, mirroring XLA's model:
+        slicing ops are output-driven (they never stream the whole buffer),
+        everything else reads operands + writes the result."""
+        result = _shape_bytes(op.type_str, bf16_activations)
+        if op.opcode in ("dynamic-slice", "gather", "slice"):
+            return 2.0 * result
+        if op.opcode == "dynamic-update-slice":
+            # read + write of the updated window (operand 1), buffer aliased
+            operands = _OPERAND_RE.findall(
+                op.rest[: op.rest.index(")")] if ")" in op.rest else op.rest
+            )
+            upd = (
+                _shape_bytes(comp.symbols.get(operands[1], ""), bf16_activations)
+                if len(operands) > 1 else 0
+            )
+            return 2.0 * upd
+        if op.opcode in ("broadcast", "iota"):
+            return float(result)
+        nbytes = float(result)
+        operands = _OPERAND_RE.findall(
+            op.rest[: op.rest.index(")")] if ")" in op.rest else op.rest
+        )
+        for o in operands:
+            t = comp.symbols.get(o)
+            if t:
+                nbytes += _shape_bytes(t, bf16_activations)
+        return nbytes
+
+    def comp_cost(name: str, depth: int = 0, fused: bool = False) -> HloCost:
+        key = (name, fused)
+        if key in cache:
+            return cache[key]
+        comp = comps.get(name)
+        cost = HloCost()
+        if comp is None or depth > 64:
+            return cost
+        cache[key] = cost  # provisional (cycles shouldn't occur)
+        for op in comp.ops:
+            if op.opcode in _FREE_OPCODES:
+                continue
+            if op.opcode == "while":
+                trip = default_trip
+                tm = _TRIP_RE.search(op.rest)
+                if tm:
+                    trip = int(tm.group(1))
+                else:
+                    cost.unknown_trip_loops += 1
+                bm = _BODY_RE.search(op.rest)
+                cm = _COND_RE.search(op.rest)
+                if bm:
+                    cost.merge_scaled(comp_cost(bm.group(1), depth + 1, fused), trip)
+                if cm:
+                    cost.merge_scaled(comp_cost(cm.group(1), depth + 1, fused), trip + 1)
+                continue
+            if op.opcode in ("fusion", "call", "conditional", "map", "sort", "reduce",
+                             "reduce-window", "scatter", "select-and-scatter",
+                             "async-start", "custom-call"):
+                sub_fused = fused or op.opcode == "fusion"
+                for sub in _CALLS_RE.findall(op.rest):
+                    cost.merge_scaled(comp_cost(sub, depth + 1, sub_fused), 1.0)
+            if op.opcode == "dot":
+                f = _dot_flops(op, comp.symbols)
+                cost.flops += f
+                meta = re.search(r'op_name="([^"]*)"', op.rest)
+                key_ = meta.group(1).split("/")[-1] if meta else "dot"
+                cost.dot_flops_by_meta[key_] = cost.dot_flops_by_meta.get(key_, 0) + f
+            base = op.opcode.replace("-start", "")
+            if base in _COLLECTIVES or op.opcode in _COLLECTIVES:
+                nbytes = _shape_bytes(op.type_str, bf16_activations)
+                g = _group_size(op.rest)
+                cost.wire_bytes += _collective_wire(base, nbytes, g)
+                cost.collective_counts[base] = cost.collective_counts.get(base, 0) + 1
+            if not fused and op.opcode in _MEM_OPCODES:
+                cost.bytes_accessed += _op_bytes(op, comp)
+        return cost
+
+    total = HloCost()
+    total.merge_scaled(comp_cost(entry.name), 1.0)
+    return total

@@ -1,0 +1,195 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+compute term    = HLO_FLOPs / (chips * peak FLOP/s)
+memory term     = HLO_bytes / (chips * HBM bw)
+collective term = collective bytes-on-wire per chip / link bw
+
+cost_analysis() provides flops/bytes.  Collective bytes are NOT in
+cost_analysis, so we parse the (post-SPMD) HLO text: for each all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute we take the
+result shape, the replica-group size, and a ring-algorithm cost model to get
+per-device bytes on the wire.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Any, Dict, List, Optional
+
+from repro.launch import mesh as meshlib
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([\d,]*)\][^=]*?"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    wire_bytes_per_device: float     # ring-model bytes each device sends
+    result_bytes: Dict[str, int]
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    result_bytes: Dict[str, int] = {}
+    wire = 0.0
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        nbytes = _shape_bytes(dtype, dims)
+        # group size: scan forward a bounded window for replica_groups
+        window = hlo_text[m.end(): m.end() + 2000]
+        g = 1
+        gm = _IOTA_GROUPS_RE.search(window)
+        if gm:
+            g = int(gm.group(2))
+        else:
+            gm = _GROUPS_RE.search(window)
+            if gm:
+                g = len(gm.group(1).split(","))
+        counts[kind] = counts.get(kind, 0) + 1
+        result_bytes[kind] = result_bytes.get(kind, 0) + nbytes
+        if g <= 1:
+            continue
+        # ring-model wire bytes per participating device
+        if kind == "all-gather":
+            wire += nbytes * (g - 1) / g            # result is the gathered buf
+        elif kind == "all-reduce":
+            wire += 2.0 * nbytes * (g - 1) / g      # reduce-scatter + all-gather
+        elif kind == "reduce-scatter":
+            wire += nbytes * (g - 1)                 # result is the scattered shard
+        elif kind == "all-to-all":
+            wire += nbytes * (g - 1) / g
+        elif kind == "collective-permute":
+            wire += nbytes
+    return CollectiveStats(counts=counts, wire_bytes_per_device=wire, result_bytes=result_bytes)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                 # total HLO flops (all devices)
+    hbm_bytes: float             # total HLO bytes accessed
+    wire_bytes_per_device: float
+    chips: int
+    model_flops: float = 0.0     # 6*N*D useful flops
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / (self.chips * meshlib.PEAK_FLOPS_BF16)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / (self.chips * meshlib.HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        return self.wire_bytes_per_device / meshlib.ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step-time estimate: max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> Optional[float]:
+        if self.model_flops and self.flops:
+            return self.model_flops / self.flops
+        return None
+
+    @property
+    def roofline_fraction(self) -> Optional[float]:
+        """Fraction of chip peak spent on *useful* model flops at the
+        roofline-predicted step time (MFU upper bound for this lowering)."""
+        if not self.model_flops:
+            return None
+        t = self.step_time_s
+        return self.model_flops / (t * self.chips * meshlib.PEAK_FLOPS_BF16)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "wire_bytes_per_device": self.wire_bytes_per_device,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "step_time_s": self.step_time_s,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_estimate(cfg: Any, shape: Any) -> float:
+    """6*N_active*D for train; 2*N_active*D for prefill; 2*N_active*B for decode."""
+    from repro.models.common import ModelConfig, param_count
+    from repro.models.dlrm import DLRMConfig
+    from repro.models import build_model
+
+    if isinstance(cfg, DLRMConfig):
+        n = param_count(build_model(cfg).param_specs())
+        # embedding lookups are sparse; MLP params dominate compute
+        tokens = shape.global_batch
+        return 6.0 * n * tokens * 1e-3  # rough: tables are lookup-bound
+    n_active = cfg.active_params()
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def attention_flops_estimate(cfg: Any, shape: Any) -> float:
+    """Causal attention score+value flops (not in 6ND), for context."""
+    from repro.models.dlrm import DLRMConfig
+
+    if isinstance(cfg, DLRMConfig) or getattr(cfg, "attention_free", False):
+        return 0.0
+    b, s = shape.global_batch, shape.seq_len
+    h, d = cfg.num_heads, cfg.head_dim
+    if cfg.family == "hybrid":
+        layers = cfg.num_layers // cfg.block_period
+    else:
+        layers = cfg.num_layers
+    if shape.mode == "train":
+        return 3.0 * 2.0 * b * h * s * s * d * layers  # fwd+bwd, causal half
+    if shape.mode == "prefill":
+        return 2.0 * b * h * s * s * d * layers / 2
+    return 2.0 * 2.0 * b * h * s * d * layers

@@ -1,0 +1,83 @@
+"""Serving driver: continuous batched decode with a KV cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
+      --batch 4 --prompt-len 32 --decode-steps 16
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as cfglib
+from repro.models import build_model
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--decode-steps", type=int, default=16)
+    ap.add_argument("--cache-len", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = cfglib.get_smoke_config(args.arch) if args.smoke else cfglib.get_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    b, s = args.batch, args.prompt_len
+    prompt = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)}
+    if cfg.frontend == "vision":
+        prompt["image_embeds"] = jnp.asarray(
+            rng.normal(0, 0.02, (b, cfg.num_patches, cfg.d_model)), cfg.compute_dtype
+        )
+    if cfg.frontend == "audio":
+        prompt["frames"] = jnp.asarray(
+            rng.normal(0, 0.02, (b, s, cfg.d_model)), cfg.compute_dtype
+        )
+        prompt["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, max(s // 8, 8))), jnp.int32
+        )
+
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode_step)
+
+    t0 = time.perf_counter()
+    logits, _ = prefill(params, prompt)
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+
+    # decode against a fresh fixed-capacity cache (the serving layout)
+    cache = jax.tree.map(
+        lambda sd: jnp.zeros(sd.shape, sd.dtype), model.abstract_cache(b, args.cache_len)
+    )
+    token = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+    toks = [token]
+    t0 = time.perf_counter()
+    for i in range(args.decode_steps):
+        batch = {"token": token, "pos": jnp.asarray(i, jnp.int32), "cache": cache}
+        logits, cache = decode(params, batch)
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        toks.append(token)
+    token.block_until_ready()
+    t_decode = time.perf_counter() - t0
+
+    seq = jnp.concatenate(toks, axis=1)
+    print(f"arch={cfg.name} prefill_s={t_prefill:.3f} "
+          f"decode_tok_per_s={b * args.decode_steps / t_decode:.1f}")
+    print("sampled tokens[0]:", np.asarray(seq[0])[:16].tolist())
+    ok = bool(np.isfinite(np.asarray(logits, np.float32)).all())
+    print("finite logits:", ok)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,253 @@
+"""Build jitted, sharded step functions for any (arch config, shape, mesh).
+
+These are the entry points the trainer, server, dry-run, and roofline all
+share: ``make_train_step`` / ``make_prefill_step`` / ``make_decode_step``
+return ``(fn, input_shapedtypes, in_shardings)`` ready for
+``jax.jit(...).lower(...).compile()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs as cfglib
+from repro.distributed.context import sharding_context
+from repro.distributed.sharding import AxisRules, FSDP_RULES, SERVE_RULES, TRAIN_RULES, logical_to_spec
+from repro.models import build_model
+from repro.models.common import ModelConfig, abstract_params, partition_specs
+from repro.models.dlrm import DLRMConfig
+from repro.optim import OptimizerConfig, adamw_init, adamw_update
+
+
+# ---------------------------------------------------------------------------
+# Input logical axes
+# ---------------------------------------------------------------------------
+
+_INPUT_LOGICAL = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "token": ("batch", None),
+    "pos": (),
+    "image_embeds": ("batch", None, None),
+    "frames": ("batch", "seq", None),
+    "dense": ("batch", None),
+    "sparse_ids": ("batch", None, None),
+    "sparse_mask": ("batch", None, None),
+    "label": ("batch",),
+}
+
+
+def batch_shardings(
+    model, inputs: Dict[str, Any], rules: AxisRules, mesh: Mesh
+) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    for k, v in inputs.items():
+        if k == "cache":
+            cache_logical = model.cache_logical_axes()
+            out[k] = {
+                ck: logical_to_spec(cache_logical[ck], rules, mesh, cv.shape)
+                for ck, cv in v.items()
+            }
+        else:
+            out[k] = logical_to_spec(_INPUT_LOGICAL[k], rules, mesh, v.shape)
+    return out
+
+
+def to_named(tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StepBundle:
+    fn: Callable
+    abstract_args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    donate_argnums: Tuple[int, ...] = ()
+
+    def jit(self):
+        return jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            donate_argnums=self.donate_argnums,
+        )
+
+    def lower(self):
+        return self.jit().lower(*self.abstract_args)
+
+
+def make_train_step(
+    cfg: Any,
+    mesh: Mesh,
+    batch: int,
+    seq: int,
+    rules: Optional[AxisRules] = None,
+    opt_cfg: Optional[OptimizerConfig] = None,
+) -> StepBundle:
+    if rules is None:
+        rules = FSDP_RULES if getattr(cfg, "sharding_profile", "tp") == "fsdp" else TRAIN_RULES
+    opt_cfg = opt_cfg or OptimizerConfig()
+    model = build_model(cfg)
+
+    if isinstance(cfg, DLRMConfig):
+        return _make_dlrm_sparse_train_step(cfg, model, mesh, batch, rules, opt_cfg)
+
+    def train_step(params, opt_state, step_batch):
+        with sharding_context(mesh, rules):
+            loss, grads = jax.value_and_grad(model.loss)(params, step_batch)
+            new_params, new_opt, gnorm = adamw_update(params, grads, opt_state, opt_cfg)
+            metrics = {"loss": loss, "grad_norm": gnorm}
+            return new_params, new_opt, metrics
+
+    aparams = model.abstract()
+    pspecs = partition_specs(model.param_specs(), rules, mesh)
+    aopt = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), aparams)
+    opt_specs = {
+        "mu": pspecs,
+        "nu": pspecs,
+        "step": P(),
+    }
+    ainputs = model.input_specs(batch, seq, "train")
+    bspecs = batch_shardings(model, ainputs, rules, mesh)
+    return StepBundle(
+        fn=train_step,
+        abstract_args=(aparams, aopt, ainputs),
+        in_shardings=(
+            to_named(pspecs, mesh),
+            to_named(opt_specs, mesh),
+            to_named(bspecs, mesh),
+        ),
+        donate_argnums=(0, 1),
+    )
+
+
+def _make_dlrm_sparse_train_step(cfg, model, mesh, batch, rules, opt_cfg) -> StepBundle:
+    """DLRM H-hillclimb step: dense AdamW for MLPs + row-wise AdaGrad sparse
+    scatter-updates for the embedding tables (see models/dlrm.py)."""
+    from repro.optim.optimizers import wsd_schedule
+
+    def train_step(params, opt_state, step_batch):
+        with sharding_context(mesh, rules):
+            tables = params["tables"]
+            mlp_params = {"bottom": params["bottom"], "top": params["top"]}
+            pooled = model.pooled_embeddings_sharded(tables, step_batch, mesh)
+
+            def loss_fn(mp, pl):
+                return model.loss_from_pooled(mp, pl, step_batch)
+
+            loss, (g_mlp, dpooled) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+                mlp_params, pooled
+            )
+            new_mlp, new_adam, gnorm = adamw_update(
+                mlp_params, g_mlp, opt_state["adam"], opt_cfg
+            )
+            lr = wsd_schedule(opt_cfg, opt_state["adam"]["step"] + 1) * 10.0
+            new_tables, new_acc = model.sparse_table_update_sharded(
+                tables, opt_state["acc"], dpooled, step_batch, lr, mesh
+            )
+            new_params = {
+                "tables": new_tables,
+                "bottom": new_mlp["bottom"],
+                "top": new_mlp["top"],
+            }
+            new_opt = {"adam": new_adam, "acc": new_acc}
+            return new_params, new_opt, {"loss": loss, "grad_norm": gnorm}
+
+    aparams = model.abstract()
+    pspecs = partition_specs(model.param_specs(), rules, mesh)
+    mlp_pspecs = {"bottom": pspecs["bottom"], "top": pspecs["top"]}
+    aopt = {
+        "adam": jax.eval_shape(
+            lambda p: adamw_init(p, opt_cfg),
+            {"bottom": aparams["bottom"], "top": aparams["top"]},
+        ),
+        "acc": jax.ShapeDtypeStruct(
+            (cfg.num_tables, cfg.vocab_per_table), jnp.float32
+        ),
+    }
+    opt_specs = {
+        "adam": {"mu": mlp_pspecs, "nu": mlp_pspecs, "step": P()},
+        "acc": pspecs["tables"].__class__(*tuple(pspecs["tables"])[:2]),
+    }
+    ainputs = model.input_specs(batch, 0, "train")
+    bspecs = batch_shardings(model, ainputs, rules, mesh)
+    return StepBundle(
+        fn=train_step,
+        abstract_args=(aparams, aopt, ainputs),
+        in_shardings=(
+            to_named(pspecs, mesh),
+            to_named(opt_specs, mesh),
+            to_named(bspecs, mesh),
+        ),
+        donate_argnums=(0, 1),
+    )
+
+
+def make_prefill_step(
+    cfg: Any, mesh: Mesh, batch: int, seq: int, rules: Optional[AxisRules] = None
+) -> StepBundle:
+    rules = rules or SERVE_RULES
+    model = build_model(cfg)
+
+    def prefill_step(params, step_batch):
+        with sharding_context(mesh, rules):
+            return model.prefill(params, step_batch)
+
+    aparams = model.abstract()
+    pspecs = partition_specs(model.param_specs(), rules, mesh)
+    ainputs = model.input_specs(batch, seq, "prefill")
+    bspecs = batch_shardings(model, ainputs, rules, mesh)
+    return StepBundle(
+        fn=prefill_step,
+        abstract_args=(aparams, ainputs),
+        in_shardings=(to_named(pspecs, mesh), to_named(bspecs, mesh)),
+    )
+
+
+def make_decode_step(
+    cfg: Any, mesh: Mesh, batch: int, seq: int, rules: Optional[AxisRules] = None
+) -> StepBundle:
+    rules = rules or SERVE_RULES
+    model = build_model(cfg)
+
+    def decode_step(params, step_batch):
+        with sharding_context(mesh, rules):
+            return model.decode_step(params, step_batch)
+
+    aparams = model.abstract()
+    pspecs = partition_specs(model.param_specs(), rules, mesh)
+    ainputs = model.input_specs(batch, seq, "decode")
+    bspecs = batch_shardings(model, ainputs, rules, mesh)
+    return StepBundle(
+        fn=decode_step,
+        abstract_args=(aparams, ainputs),
+        in_shardings=(to_named(pspecs, mesh), to_named(bspecs, mesh)),
+        donate_argnums=(),
+    )
+
+
+def make_step(
+    arch: str,
+    shape_name: str,
+    mesh: Mesh,
+    smoke: bool = False,
+    rules: Optional[AxisRules] = None,
+) -> StepBundle:
+    """Uniform entry: (arch id, shape id) -> StepBundle."""
+    cfg = cfglib.get_smoke_config(arch) if smoke else cfglib.get_config(arch)
+    shape = (cfglib.SMOKE_SHAPES if smoke else cfglib.SHAPES)[shape_name]
+    if shape.mode == "train":
+        return make_train_step(cfg, mesh, shape.global_batch, shape.seq_len, rules)
+    if shape.mode == "prefill":
+        return make_prefill_step(cfg, mesh, shape.global_batch, shape.seq_len, rules)
+    return make_decode_step(cfg, mesh, shape.global_batch, shape.seq_len, rules)

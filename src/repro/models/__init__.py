@@ -1,0 +1,34 @@
+from typing import Any
+
+from repro.models.common import (
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    SSMConfig,
+    param_count,
+)
+
+
+def build_model(cfg: Any):
+    """Model registry: config -> model object."""
+    from repro.models.dlrm import DLRM, DLRMConfig
+
+    if isinstance(cfg, DLRMConfig):
+        return DLRM(cfg)
+
+    assert isinstance(cfg, ModelConfig), type(cfg)
+    if cfg.encoder_layers > 0:
+        from repro.models.encdec import EncDecLM
+
+        return EncDecLM(cfg)
+    if cfg.family == "ssm":
+        from repro.models.ssm_lm import SSMLM
+
+        return SSMLM(cfg)
+    if cfg.family == "hybrid":
+        from repro.models.hybrid import HybridLM
+
+        return HybridLM(cfg)
+    from repro.models.transformer import DecoderLM
+
+    return DecoderLM(cfg)

@@ -1,0 +1,368 @@
+"""Attention: GQA (chunked online-softmax prefill + decode) and MLA.
+
+The XLA path uses a flash-style blocked attention written with ``lax.scan``
+so that 32k-token prefills never materialize (S, S) score matrices.  The
+Pallas kernel in ``repro.kernels.flash_attention`` is the TPU fast path; the
+functions here are the portable reference used for dry-run lowering.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.models.common import MLAConfig, ModelConfig, ParamSpec
+from repro.models.layers import apply_rope, rmsnorm
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# GQA parameter specs
+# ---------------------------------------------------------------------------
+
+
+def gqa_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, h, kvh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = cfg.param_dtype
+    specs = {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", None), dt, "scaled"),
+        "wk": ParamSpec((d, kvh, hd), ("embed", "kv_heads", None), dt, "scaled"),
+        "wv": ParamSpec((d, kvh, hd), ("embed", "kv_heads", None), dt, "scaled"),
+        "wo": ParamSpec((h, hd, d), ("heads", None, "embed"), dt, "scaled"),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = ParamSpec((h, hd), ("heads", None), dt, "zeros")
+        specs["bk"] = ParamSpec((kvh, hd), ("kv_heads", None), dt, "zeros")
+        specs["bv"] = ParamSpec((kvh, hd), ("kv_heads", None), dt, "zeros")
+    if cfg.qk_norm:
+        specs["q_norm"] = ParamSpec((hd,), (None,), jnp.float32, "ones")
+        specs["k_norm"] = ParamSpec((hd,), (None,), jnp.float32, "ones")
+    return specs
+
+
+def gqa_project_qkv(
+    params: Dict[str, jax.Array],
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    q = constrain(
+        jnp.einsum("bsd,dhk->bshk", x, params["wq"]), ("batch", "seq", "heads", None)
+    )
+    k = constrain(
+        jnp.einsum("bsd,dhk->bshk", x, params["wk"]), ("batch", "seq", "kv_heads", None)
+    )
+    v = constrain(
+        jnp.einsum("bsd,dhk->bshk", x, params["wv"]), ("batch", "seq", "kv_heads", None)
+    )
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.rms_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.rms_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Blocked online-softmax attention (prefill / train)
+# ---------------------------------------------------------------------------
+
+
+def blocked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    chunk: int = 1024,
+    k_chunk: Optional[int] = None,
+    softmax_scale: Optional[float] = None,
+) -> jax.Array:
+    """q: (B, S, H, D); k, v: (B, T, KVH, D).  Returns (B, S, H, D).
+
+    Flash-style blocked attention with a custom VJP: the forward saves only
+    (q, k, v, out, L); the backward recomputes scores block-by-block.  This
+    keeps both forward and backward memory at O(S * chunk) — without it,
+    differentiating through the block scans stores the full S x S score
+    tensor per layer (measured: 8.6 GB/layer at 4k, fatal at 32k).
+    """
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    kvh = k.shape[2]
+    g = h // kvh
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(d)
+
+    cq = min(chunk, s)
+    ck = min(k_chunk or chunk, t)
+    if s % cq or t % ck:
+        return _dense_attention(q, k, v, causal=causal, scale=scale)
+
+    # GQA: expand kv to full query heads ONCE (outside the chunk loops) so
+    # the head dim stays a clean TP-shardable axis.  Under SPMD each shard
+    # materializes only its own g copies, and the backward reduction over
+    # the group dim happens once per layer instead of once per chunk.
+    if g > 1:
+        k = constrain(jnp.repeat(k, g, axis=2), ("batch", "seq", "heads", None))
+        v = constrain(jnp.repeat(v, g, axis=2), ("batch", "seq", "heads", None))
+    return _flash(q, k, v, causal, cq, ck, scale)
+
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, cq, ck, scale):
+    out, _ = _flash_fwd_impl(q, k, v, causal, cq, ck, scale)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, causal, cq, ck, scale):
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    nq, nk = s // cq, t // ck
+    qb = q.reshape(b, nq, cq, h, d).transpose(1, 0, 3, 2, 4)          # (nq,B,H,Cq,D)
+    qb = constrain(qb, (None, "batch", "heads", None, None))
+    kb = k.reshape(b, nk, ck, h, d).transpose(1, 0, 3, 2, 4)          # (nk,B,H,Ck,D)
+    vb = v.reshape(b, nk, ck, h, d).transpose(1, 0, 3, 2, 4)
+    q_pos = jnp.arange(cq)
+    k_pos = jnp.arange(ck)
+
+    def q_block(_, qi_and_q):
+        qi, qc = qi_and_q
+        m0 = jnp.full((b, h, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, cq), jnp.float32)
+        a0 = jnp.zeros((b, h, cq, d), jnp.float32)
+
+        def k_block(carry, inp):
+            m, l, acc = carry
+            kj, kc, vc = inp
+            sc = jnp.einsum("bhqd,bhkd->bhqk", qc, kc).astype(jnp.float32) * scale
+            if causal:
+                mask = (qi * cq + q_pos)[:, None] >= (kj * ck + k_pos)[None, :]
+                sc = jnp.where(mask, sc, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(qc.dtype), vc
+            ).astype(jnp.float32)
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(k_block, (m0, l0, a0), (jnp.arange(nk), kb, vb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))                       # (B,H,Cq)
+        return None, (out.astype(q.dtype), lse)
+
+    _, (outs, lses) = jax.lax.scan(q_block, None, (jnp.arange(nq), qb))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, s, h, d)            # (B,S,H,D)
+    lse = lses.transpose(1, 2, 0, 3).reshape(b, h, s)                  # (B,H,S)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, causal, cq, ck, scale):
+    out, lse = _flash_fwd_impl(q, k, v, causal, cq, ck, scale)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, cq, ck, scale, res, dout):
+    q, k, v, out, lse = res
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    nq, nk = s // cq, t // ck
+
+    # row-wise D = sum(dout * out)
+    delta = jnp.einsum("bshd,bshd->bhs", dout.astype(jnp.float32), out.astype(jnp.float32))
+
+    qb = q.reshape(b, nq, cq, h, d).transpose(1, 0, 3, 2, 4)           # (nq,B,H,Cq,D)
+    dob = dout.reshape(b, nq, cq, h, d).transpose(1, 0, 3, 2, 4)
+    lseb = lse.reshape(b, h, nq, cq).transpose(2, 0, 1, 3)             # (nq,B,H,Cq)
+    deltab = delta.reshape(b, h, nq, cq).transpose(2, 0, 1, 3)
+    kb = k.reshape(b, nk, ck, h, d).transpose(1, 0, 3, 2, 4)           # (nk,B,H,Ck,D)
+    vb = v.reshape(b, nk, ck, h, d).transpose(1, 0, 3, 2, 4)
+    q_pos = jnp.arange(cq)
+    k_pos = jnp.arange(ck)
+
+    def kv_block(dq_acc, inp):
+        kj, kc, vc = inp
+        dk0 = jnp.zeros((b, h, ck, d), jnp.float32)
+        dv0 = jnp.zeros((b, h, ck, d), jnp.float32)
+
+        def q_block(carry, qinp):
+            dk, dv = carry
+            qi, qc, doc, lc, Dc = qinp
+            sc = jnp.einsum("bhqd,bhkd->bhqk", qc, kc).astype(jnp.float32) * scale
+            if causal:
+                mask = (qi * cq + q_pos)[:, None] >= (kj * ck + k_pos)[None, :]
+                sc = jnp.where(mask, sc, NEG_INF)
+            p = jnp.exp(sc - lc[..., None])                             # (B,H,Cq,Ck)
+            dv = dv + jnp.einsum("bhqk,bhqd->bhkd", p.astype(doc.dtype), doc)
+            dp = jnp.einsum("bhqd,bhkd->bhqk", doc, vc).astype(jnp.float32)
+            ds = p * (dp - Dc[..., None]) * scale                       # (B,H,Cq,Ck)
+            ds = ds.astype(qc.dtype)
+            dq_i = jnp.einsum("bhqk,bhkd->bhqd", ds, kc)
+            dk = dk + jnp.einsum("bhqk,bhqd->bhkd", ds, qc)
+            return (dk, dv), dq_i
+
+        (dk, dv), dq_blocks = jax.lax.scan(
+            q_block, (dk0, dv0), (jnp.arange(nq), qb, dob, lseb, deltab)
+        )
+        dq_acc = dq_acc + dq_blocks                                     # (nq,B,H,Cq,D)
+        return dq_acc, (dk, dv)
+
+    dq0 = jnp.zeros((nq, b, h, cq, d), jnp.float32)
+    dq_blocks, (dks, dvs) = jax.lax.scan(kv_block, dq0, (jnp.arange(nk), kb, vb))
+    dq = dq_blocks.transpose(1, 0, 3, 2, 4).reshape(b, s, h, d).astype(q.dtype)
+    dk = dks.transpose(1, 0, 3, 2, 4).reshape(b, t, h, d).astype(k.dtype)
+    dv = dvs.transpose(1, 0, 3, 2, 4).reshape(b, t, h, d).astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def _dense_attention(q, k, v, *, causal: bool, scale: float) -> jax.Array:
+    b, s, h, d = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, d)
+    sc = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.arange(s)[:, None] >= jnp.arange(t)[None, :]
+        sc = jnp.where(mask, sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+    return out.reshape(b, s, h, d)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention over a KV cache
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(
+    q: jax.Array,           # (B, 1, H, D)
+    k_cache: jax.Array,     # (B, S, KVH, D)
+    v_cache: jax.Array,
+    pos: jax.Array,         # scalar int32: current length (number of valid kv)
+    softmax_scale: Optional[float] = None,
+) -> jax.Array:
+    b, _, h, d = q.shape
+    s, kvh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(b, kvh, g, d)
+    sc = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache).astype(jnp.float32) * scale
+    sc = constrain(sc, ("batch", None, None, "kv_seq"))
+    valid = jnp.arange(s)[None, None, None, :] <= pos
+    sc = jnp.where(valid, sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache)
+    return out.reshape(b, 1, h, d)
+
+
+# ---------------------------------------------------------------------------
+# MLA (Multi-head Latent Attention, DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def mla_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    m = cfg.mla
+    assert m is not None
+    d, h = cfg.d_model, cfg.num_heads
+    dt = cfg.param_dtype
+    return {
+        "w_dq": ParamSpec((d, m.q_lora_rank), ("embed", None), dt, "scaled"),
+        "q_norm": ParamSpec((m.q_lora_rank,), (None,), jnp.float32, "ones"),
+        "w_uq": ParamSpec(
+            (m.q_lora_rank, h, m.qk_nope_dim + m.qk_rope_dim),
+            (None, "heads", None), dt, "scaled",
+        ),
+        "w_dkv": ParamSpec((d, m.kv_lora_rank + m.qk_rope_dim), ("embed", None), dt, "scaled"),
+        "kv_norm": ParamSpec((m.kv_lora_rank,), (None,), jnp.float32, "ones"),
+        "w_uk": ParamSpec((m.kv_lora_rank, h, m.qk_nope_dim), (None, "heads", None), dt, "scaled"),
+        "w_uv": ParamSpec((m.kv_lora_rank, h, m.v_head_dim), (None, "heads", None), dt, "scaled"),
+        "wo": ParamSpec((h, m.v_head_dim, d), ("heads", None, "embed"), dt, "scaled"),
+    }
+
+
+def mla_compress(params, x, positions, cfg: ModelConfig):
+    """Project hidden states to the compressed KV cache entries.
+
+    Returns c_kv (B, S, kv_lora) and k_rope (B, S, rope_dim) — exactly what
+    is cached for decode (the paper-faithful MLA memory saving).
+    """
+    m = cfg.mla
+    dkv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"])
+    c_kv, k_rope = dkv[..., : m.kv_lora_rank], dkv[..., m.kv_lora_rank:]
+    c_kv = rmsnorm(c_kv, params["kv_norm"], cfg.rms_eps)
+    k_rope = apply_rope(k_rope[..., None, :], positions, cfg.rope_theta)[..., 0, :]
+    return c_kv, k_rope
+
+
+def mla_queries(params, x, positions, cfg: ModelConfig):
+    m = cfg.mla
+    cq = jnp.einsum("bsd,dr->bsr", x, params["w_dq"])
+    cq = rmsnorm(cq, params["q_norm"], cfg.rms_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["w_uq"])
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_prefill_attention(params, x, positions, cfg: ModelConfig, chunk: int):
+    """Full MLA attention by expanding compressed KV into per-head K/V."""
+    m = cfg.mla
+    q_nope, q_rope = mla_queries(params, x, positions, cfg)
+    c_kv, k_rope = mla_compress(params, x, positions, cfg)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uv"])
+    # concatenate nope+rope parts; rope part is shared across heads
+    h = cfg.num_heads
+    k_rope_h = jnp.broadcast_to(k_rope[..., None, :], k_rope.shape[:2] + (h, m.qk_rope_dim))
+    q = constrain(jnp.concatenate([q_nope, q_rope], axis=-1), ("batch", "seq", "heads", None))
+    k = constrain(jnp.concatenate([k_nope, k_rope_h], axis=-1), ("batch", "seq", "heads", None))
+    v = constrain(v, ("batch", "seq", "heads", None))
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    # v head dim may differ from qk dim; pad v to qk dim for the shared
+    # blocked kernel, then slice back.
+    qk_dim = m.qk_nope_dim + m.qk_rope_dim
+    if m.v_head_dim < qk_dim:
+        v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk_dim - m.v_head_dim)))
+    else:
+        v_pad = v
+    out = blocked_attention(q, k, v_pad, causal=True, chunk=chunk,
+                            k_chunk=4 * chunk, softmax_scale=scale)
+    out = out[..., : m.v_head_dim]
+    ctx = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return ctx, (c_kv, k_rope)
+
+
+def mla_decode_attention(params, x, pos, c_kv_cache, k_rope_cache, cfg: ModelConfig):
+    """Absorbed-matrix MLA decode: attention runs in the compressed space.
+
+    c_kv_cache: (B, S, kv_lora); k_rope_cache: (B, S, rope_dim).
+    """
+    m = cfg.mla
+    positions = jnp.broadcast_to(pos, x.shape[:2])
+    q_nope, q_rope = mla_queries(params, x, positions, cfg)     # (B,1,H,*)
+    # absorb W_UK: q_c[h] = q_nope[h] @ W_UK[h]^T  -> compressed-space query
+    q_c = jnp.einsum("bshk,rhk->bshr", q_nope, params["w_uk"])  # (B,1,H,kv_lora)
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    sc = (
+        jnp.einsum("bshr,btr->bhst", q_c, c_kv_cache)
+        + jnp.einsum("bshk,btk->bhst", q_rope, k_rope_cache)
+    ).astype(jnp.float32) * scale
+    valid = jnp.arange(c_kv_cache.shape[1])[None, None, None, :] <= pos
+    sc = jnp.where(valid, sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1).astype(x.dtype)
+    ctx_c = jnp.einsum("bhst,btr->bshr", p, c_kv_cache)          # compressed ctx
+    ctx = jnp.einsum("bshr,rhk->bshk", ctx_c, params["w_uv"])    # expand with W_UV
+    return jnp.einsum("bshk,hkd->bsd", ctx, params["wo"])

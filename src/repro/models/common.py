@@ -1,0 +1,218 @@
+"""Model configuration + parameter-spec machinery.
+
+Parameters are declared as ``ParamSpec`` trees (shape, dtype, logical axes,
+initializer).  From one spec tree we derive:
+  * real initialized params (for smoke tests / examples),
+  * ``jax.ShapeDtypeStruct`` stand-ins (for the multi-pod dry-run),
+  * ``PartitionSpec`` trees (via the logical-axis rule tables).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import AxisRules, logical_to_spec
+
+
+# ---------------------------------------------------------------------------
+# Configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff: int                       # per-expert hidden
+    num_shared_experts: int = 0
+    shared_d_ff: int = 0            # hidden of the fused shared-expert MLP
+    capacity_factor: float = 1.25
+    router_dtype: Any = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 256
+    n_groups: int = 1
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | ssm | hybrid | moe | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 500000.0
+    rms_eps: float = 1e-5
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    mla: Optional[MLAConfig] = None
+    # hybrid (Jamba): layers are grouped in blocks of ``block_period`` with
+    # one attention layer at index ``attn_index`` and SSM elsewhere; FFN
+    # alternates dense / MoE with MoE on odd in-block indices.
+    block_period: int = 0
+    attn_index: int = 0
+    moe_period: int = 0             # every Nth ffn is MoE (hybrid); 0 = all
+    # encoder-decoder
+    encoder_layers: int = 0         # >0 selects the enc-dec model family
+    # modality frontends (stubs; see DESIGN.md)
+    frontend: Optional[str] = None  # None | "vision" | "audio"
+    num_patches: int = 0            # vision tokens prepended per sample
+    # numerics
+    param_dtype: Any = jnp.bfloat16
+    compute_dtype: Any = jnp.bfloat16
+    # attention lowering
+    attn_chunk: int = 1024          # online-softmax q-block size (XLA path)
+    attn_k_chunk: int = 4096        # kv-block size: larger kv blocks cut the
+                                    # (m,l,acc) carry re-materialization traffic
+    remat: bool = True
+    logit_chunk: int = 1024         # chunked cross-entropy block
+    sharding_profile: str = "tp"    # "tp" (Megatron-style) | "fsdp" (H1)
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    def active_params(self) -> int:
+        """Approximate active (per-token) parameter count."""
+        full = param_count(self)
+        if self.moe is None:
+            return full
+        moe_layers = self._num_moe_layers()
+        per_expert = 3 * self.d_model * self.moe.d_ff
+        inactive = moe_layers * per_expert * (self.moe.num_experts - self.moe.top_k)
+        return full - inactive
+
+    def _num_moe_layers(self) -> int:
+        if self.moe is None:
+            return 0
+        if self.family == "hybrid" and self.moe_period:
+            return self.num_layers // self.moe_period
+        return self.num_layers
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"            # normal | zeros | ones | scaled | conv
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def _init_leaf(key: jax.Array, spec: ParamSpec) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "scaled":
+        fan_in = spec.shape[0] if spec.shape else 1
+        std = spec.scale / math.sqrt(max(fan_in, 1))
+        return (std * jax.random.normal(key, spec.shape, jnp.float32)).astype(spec.dtype)
+    # default: normal(0, 0.02 * scale)
+    return (0.02 * spec.scale * jax.random.normal(key, spec.shape, jnp.float32)).astype(
+        spec.dtype
+    )
+
+
+def is_param_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(spec_tree: Any, key: jax.Array) -> Any:
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_param_spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_init_leaf(k, s) for k, s in zip(keys, leaves)]
+    )
+
+
+def abstract_params(spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec_tree, is_leaf=is_param_spec
+    )
+
+
+def partition_specs(spec_tree: Any, rules: AxisRules, mesh) -> Any:
+    return jax.tree.map(
+        lambda s: logical_to_spec(s.logical, rules, mesh, s.shape),
+        spec_tree,
+        is_leaf=is_param_spec,
+    )
+
+
+def param_count(cfg_or_tree: Any) -> int:
+    """Total parameter count from a ModelConfig (via its spec tree) or tree."""
+    tree = cfg_or_tree
+    if isinstance(cfg_or_tree, ModelConfig):
+        from repro.models import build_model  # lazy import to avoid a cycle
+
+        tree = build_model(cfg_or_tree).param_specs()
+    leaves = jax.tree.leaves(tree, is_leaf=is_param_spec)
+    total = 0
+    for leaf in leaves:
+        shape = leaf.shape if isinstance(leaf, ParamSpec) else np.shape(leaf)
+        total += int(np.prod(shape)) if shape else 1
+    return total
+
+
+def stacked(spec: ParamSpec, n: int) -> ParamSpec:
+    """Add a leading scan-over-layers ("stack") dimension."""
+    return ParamSpec(
+        shape=(n,) + spec.shape,
+        logical=("stack",) + spec.logical,
+        dtype=spec.dtype,
+        init=spec.init,
+        scale=spec.scale,
+    )
+
+
+def stack_tree(spec_tree: Any, n: int) -> Any:
+    return jax.tree.map(lambda s: stacked(s, n), spec_tree, is_leaf=is_param_spec)

@@ -1,0 +1,275 @@
+"""Jamba-style hybrid: blocks of (attention : Mamba = 1 : 7) with MoE FFNs.
+
+Layers are grouped into ``block_period``-sized blocks; the model scans over
+blocks (stacked params), with the block body unrolled: one attention
+sublayer at ``attn_index`` and SSM mixers elsewhere, FFNs alternating
+dense-MLP / MoE (MoE on odd in-block indices, i.e. every other layer).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.models import attention as attn
+from repro.models import layers, moe as moe_lib, ssm as ssm_lib
+from repro.models.common import ModelConfig, ParamSpec, stack_tree
+from repro.models.transformer import DecoderLM
+
+
+class HybridLM(DecoderLM):
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.block_period > 0 and cfg.num_layers % cfg.block_period == 0
+        super().__init__(cfg)
+        self.n_blocks = cfg.num_layers // cfg.block_period
+
+    def _is_attn(self, i: int) -> bool:
+        return i == self.cfg.attn_index
+
+    def _is_moe(self, i: int) -> bool:
+        return bool(self.cfg.moe) and (i % max(self.cfg.moe_period, 1) == 1)
+
+    def block_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        specs: Dict[str, Any] = {}
+        for i in range(cfg.block_period):
+            sub: Dict[str, Any] = {
+                "ln1": layers.rmsnorm_spec(cfg.d_model),
+                "ln2": layers.rmsnorm_spec(cfg.d_model),
+            }
+            sub["mixer"] = attn.gqa_specs(cfg) if self._is_attn(i) else ssm_lib.ssm_specs(cfg)
+            sub["ffn"] = (
+                moe_lib.moe_specs(cfg)
+                if self._is_moe(i)
+                else layers.mlp_specs(cfg.d_model, cfg.d_ff, cfg.param_dtype)
+            )
+            specs[f"sub{i}"] = sub
+        return specs
+
+    def param_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        return {
+            "embed": layers.embed_specs(cfg),
+            "blocks": stack_tree(self.block_specs(), self.n_blocks),
+            "ln_f": layers.rmsnorm_spec(cfg.d_model),
+        }
+
+    # -- training forward ----------------------------------------------------
+
+    def _block_train(self, bp: Dict[str, Any], x: jax.Array, positions: jax.Array):
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.block_period):
+            sp = bp[f"sub{i}"]
+            # sequence parallelism on the residual stream (see transformer.py)
+            x = constrain(x, ("batch", "seq_sp", None))
+            h = constrain(
+                layers.rmsnorm(x, sp["ln1"], cfg.rms_eps), ("batch", "seq_sp", None)
+            )
+            if self._is_attn(i):
+                q, k, v = attn.gqa_project_qkv(sp["mixer"], h, positions, cfg)
+                o = attn.blocked_attention(q, k, v, causal=True, chunk=cfg.attn_chunk, k_chunk=cfg.attn_k_chunk)
+                mix = jnp.einsum("bshk,hkd->bsd", o, sp["mixer"]["wo"])
+            else:
+                mix = ssm_lib.ssm_forward(sp["mixer"], h, cfg)
+            x = constrain(x + mix, ("batch", "seq_sp", None))
+            h = constrain(
+                layers.rmsnorm(x, sp["ln2"], cfg.rms_eps), ("batch", "seq_sp", None)
+            )
+            if self._is_moe(i):
+                f, a = moe_lib.moe_forward(sp["ffn"], h, cfg)
+                aux = aux + a
+            else:
+                f = layers.mlp(sp["ffn"], h)
+            x = constrain(x + f, ("batch", "seq_sp", None))
+        return x, aux
+
+    def backbone(self, params: Dict[str, Any], x: jax.Array, positions: jax.Array):
+        cfg = self.cfg
+
+        def body(carry, bp):
+            h, aux = carry
+            h2, a = self._block_train(bp, h, positions)
+            return (h2, aux + a), None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+        return layers.rmsnorm(x, params["ln_f"], cfg.rms_eps), aux
+
+    # -- caches ---------------------------------------------------------------
+
+    def abstract_cache(self, batch: int, seq: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        s_cfg = cfg.ssm
+        nb = self.n_blocks
+        n_ssm = cfg.block_period - 1
+        din = s_cfg.d_inner(cfg.d_model)
+        h = s_cfg.n_heads(cfg.d_model)
+        gn = s_cfg.n_groups * s_cfg.d_state
+        dt = cfg.compute_dtype
+        return {
+            "k": jax.ShapeDtypeStruct((nb, batch, seq, cfg.num_kv_heads, cfg.head_dim), dt),
+            "v": jax.ShapeDtypeStruct((nb, batch, seq, cfg.num_kv_heads, cfg.head_dim), dt),
+            "state": jax.ShapeDtypeStruct(
+                (nb, n_ssm, batch, h, s_cfg.head_dim, s_cfg.d_state), jnp.float32
+            ),
+            "conv_x": jax.ShapeDtypeStruct((nb, n_ssm, batch, s_cfg.conv_width - 1, din), dt),
+            "conv_B": jax.ShapeDtypeStruct((nb, n_ssm, batch, s_cfg.conv_width - 1, gn), dt),
+            "conv_C": jax.ShapeDtypeStruct((nb, n_ssm, batch, s_cfg.conv_width - 1, gn), dt),
+        }
+
+    def cache_logical_axes(self) -> Dict[str, Tuple]:
+        return {
+            "k": ("stack", "batch", "kv_seq", "kv_heads", None),
+            "v": ("stack", "batch", "kv_seq", "kv_heads", None),
+            "state": ("stack", None, "batch", "ssm_heads", None, None),
+            "conv_x": ("stack", None, "batch", None, "mlp"),
+            "conv_B": ("stack", None, "batch", None, None),
+            "conv_C": ("stack", None, "batch", None, None),
+        }
+
+    # -- serving --------------------------------------------------------------
+
+    def prefill(self, params: Dict[str, Any], batch: Dict[str, jax.Array]):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        x = layers.embed_tokens(params["embed"], tokens, cfg)
+        s_cfg = cfg.ssm
+
+        def body(h, bp):
+            caches: Dict[str, Any] = {}
+            ssm_states, conv_xs, conv_bs, conv_cs = [], [], [], []
+            for i in range(cfg.block_period):
+                sp = bp[f"sub{i}"]
+                hn = layers.rmsnorm(h, sp["ln1"], cfg.rms_eps)
+                if self._is_attn(i):
+                    q, k, v = attn.gqa_project_qkv(sp["mixer"], hn, positions, cfg)
+                    o = attn.blocked_attention(q, k, v, causal=True, chunk=cfg.attn_chunk, k_chunk=cfg.attn_k_chunk)
+                    mix = jnp.einsum("bshk,hkd->bsd", o, sp["mixer"]["wo"])
+                    caches["k"] = k.astype(cfg.compute_dtype)
+                    caches["v"] = v.astype(cfg.compute_dtype)
+                else:
+                    mix, st, cx, cb_, cc = _ssm_prefill_with_state(sp["mixer"], hn, cfg)
+                    ssm_states.append(st)
+                    conv_xs.append(cx)
+                    conv_bs.append(cb_)
+                    conv_cs.append(cc)
+                h = h + mix
+                hn = layers.rmsnorm(h, sp["ln2"], cfg.rms_eps)
+                if self._is_moe(i):
+                    f, _ = moe_lib.moe_forward(sp["ffn"], hn, cfg)
+                else:
+                    f = layers.mlp(sp["ffn"], hn)
+                h = h + f
+            caches["state"] = jnp.stack(ssm_states)
+            caches["conv_x"] = jnp.stack(conv_xs)
+            caches["conv_B"] = jnp.stack(conv_bs)
+            caches["conv_C"] = jnp.stack(conv_cs)
+            return h, caches
+
+        x, cache = jax.lax.scan(body, x, params["blocks"])
+        x = layers.rmsnorm(x, params["ln_f"], cfg.rms_eps)
+        logits = layers.output_logits(params["embed"], x[:, -1:, :], cfg)
+        return logits, cache
+
+    def decode_step(self, params: Dict[str, Any], batch: Dict[str, Any]):
+        cfg = self.cfg
+        token, pos, cache = batch["token"], batch["pos"], batch["cache"]
+        x = layers.embed_tokens(params["embed"], token, cfg)
+        positions = jnp.broadcast_to(pos, token.shape)
+
+        def body(h, inp):
+            bp, k_c, v_c, states, conv_x, conv_B, conv_C = inp
+            new_states, new_cx, new_cb, new_cc = [], [], [], []
+            ssm_i = 0
+            for i in range(cfg.block_period):
+                sp = bp[f"sub{i}"]
+                hn = layers.rmsnorm(h, sp["ln1"], cfg.rms_eps)
+                if self._is_attn(i):
+                    q, k, v = attn.gqa_project_qkv(sp["mixer"], hn, positions, cfg)
+                    k_c = jax.lax.dynamic_update_slice(k_c, k.astype(k_c.dtype), (0, pos, 0, 0))
+                    v_c = jax.lax.dynamic_update_slice(v_c, v.astype(v_c.dtype), (0, pos, 0, 0))
+                    o = attn.decode_attention(q, k_c, v_c, pos)
+                    mix = jnp.einsum("bshk,hkd->bsd", o, sp["mixer"]["wo"])
+                else:
+                    sub_cache = {
+                        "state": states[ssm_i],
+                        "conv_x": conv_x[ssm_i],
+                        "conv_B": conv_B[ssm_i],
+                        "conv_C": conv_C[ssm_i],
+                    }
+                    mix, sub_cache = ssm_lib.ssm_decode_step(sp["mixer"], hn, sub_cache, cfg)
+                    new_states.append(sub_cache["state"])
+                    new_cx.append(sub_cache["conv_x"])
+                    new_cb.append(sub_cache["conv_B"])
+                    new_cc.append(sub_cache["conv_C"])
+                    ssm_i += 1
+                h = h + mix
+                hn = layers.rmsnorm(h, sp["ln2"], cfg.rms_eps)
+                if self._is_moe(i):
+                    f, _ = moe_lib.moe_forward(sp["ffn"], hn, cfg)
+                else:
+                    f = layers.mlp(sp["ffn"], hn)
+                h = h + f
+            new_cache = {
+                "k": k_c,
+                "v": v_c,
+                "state": jnp.stack(new_states),
+                "conv_x": jnp.stack(new_cx),
+                "conv_B": jnp.stack(new_cb),
+                "conv_C": jnp.stack(new_cc),
+            }
+            return h, new_cache
+
+        xs = (
+            params["blocks"], cache["k"], cache["v"], cache["state"],
+            cache["conv_x"], cache["conv_B"], cache["conv_C"],
+        )
+        x, new_cache = jax.lax.scan(body, x, xs)
+        x = layers.rmsnorm(x, params["ln_f"], cfg.rms_eps)
+        logits = layers.output_logits(params["embed"], x, cfg)
+        return logits, new_cache
+
+
+def _ssm_prefill_with_state(params, x, cfg: ModelConfig):
+    """Mamba-2 prefill that also returns the final SSM + conv states."""
+    s_cfg = cfg.ssm
+    d = cfg.d_model
+    din = s_cfg.d_inner(d)
+    h = s_cfg.n_heads(d)
+    p = s_cfg.head_dim
+    g, n = s_cfg.n_groups, s_cfg.d_state
+    w = s_cfg.conv_width
+
+    z = jnp.einsum("bsd,de->bse", x, params["wz"])
+    xi_raw = jnp.einsum("bsd,de->bse", x, params["wx"])
+    Bv_raw = jnp.einsum("bsd,de->bse", x, params["wB"])
+    Cv_raw = jnp.einsum("bsd,de->bse", x, params["wC"])
+    dt = jnp.einsum("bsd,dh->bsh", x, params["wdt"]).astype(jnp.float32)
+
+    conv_x = xi_raw[:, -(w - 1):, :].astype(cfg.compute_dtype)
+    conv_B = Bv_raw[:, -(w - 1):, :].astype(cfg.compute_dtype)
+    conv_C = Cv_raw[:, -(w - 1):, :].astype(cfg.compute_dtype)
+
+    xi = jax.nn.silu(ssm_lib._causal_conv(xi_raw, params["conv_x"]).astype(jnp.float32)).astype(x.dtype)
+    Bv = jax.nn.silu(ssm_lib._causal_conv(Bv_raw, params["conv_B"]).astype(jnp.float32)).astype(x.dtype)
+    Cv = jax.nn.silu(ssm_lib._causal_conv(Cv_raw, params["conv_C"]).astype(jnp.float32)).astype(x.dtype)
+
+    dt = jax.nn.softplus(dt + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    b, s = x.shape[:2]
+    y, state = ssm_lib.ssd_chunked(
+        xi.reshape(b, s, h, p), dt, A,
+        Bv.reshape(b, s, g, n), Cv.reshape(b, s, g, n), chunk=s_cfg.chunk,
+    )
+    y = y + xi.reshape(b, s, h, p) * params["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(b, s, din)
+    y = layers.rmsnorm(
+        y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), params["norm"], cfg.rms_eps
+    )
+    out = jnp.einsum("bse,ed->bsd", y, params["out"])
+    return out, state, conv_x, conv_B, conv_C

@@ -1,0 +1,139 @@
+"""Shared neural-net building blocks (pure functions over param dicts)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.models.common import ModelConfig, ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_spec(dim: int) -> ParamSpec:
+    return ParamSpec((dim,), ("embed",), dtype=jnp.float32, init="ones")
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                     # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                        # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(d_model: int, d_ff: int, dtype: Any) -> Dict[str, ParamSpec]:
+    return {
+        "wi_gate": ParamSpec((d_model, d_ff), ("embed", "mlp"), dtype, "scaled"),
+        "wi_up": ParamSpec((d_model, d_ff), ("embed", "mlp"), dtype, "scaled"),
+        "wo": ParamSpec((d_ff, d_model), ("mlp", "embed"), dtype, "scaled"),
+    }
+
+
+def mlp(params: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    gate = jnp.einsum("...d,df->...f", x, params["wi_gate"])
+    up = jnp.einsum("...d,df->...f", x, params["wi_up"])
+    hidden = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    hidden = constrain(hidden, ("batch", "seq", "mlp"))
+    out = jnp.einsum("...f,fd->...d", hidden, params["wo"])
+    return constrain(out, ("batch", "seq", None))
+
+
+# ---------------------------------------------------------------------------
+# Embedding + logits
+# ---------------------------------------------------------------------------
+
+
+def embed_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    specs = {
+        "tok": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        specs["out"] = ParamSpec(
+            (cfg.d_model, cfg.vocab_size), ("embed", "vocab"), cfg.param_dtype, "scaled"
+        )
+    return specs
+
+
+def embed_tokens(params: Dict[str, jax.Array], tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = jnp.take(params["tok"], tokens, axis=0).astype(cfg.compute_dtype)
+    return constrain(x, ("batch", "seq", None))
+
+
+def output_logits(params: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    w = params["tok"].T if cfg.tie_embeddings else params["out"]
+    return jnp.einsum("...d,dv->...v", x, w.astype(cfg.compute_dtype))
+
+
+def chunked_softmax_xent(
+    params: Dict[str, jax.Array],
+    x: jax.Array,
+    labels: jax.Array,
+    cfg: ModelConfig,
+    mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Cross-entropy over (B, S, d_model) activations without materializing
+    the full (B, S, vocab) logits: scan over sequence chunks.
+
+    The 128k-163k vocabularies of the assigned archs make full-logit
+    materialization the dominant activation-memory term; chunking bounds it
+    at (B, chunk, vocab_shard).
+    """
+    b, s, d = x.shape
+    chunk = min(cfg.logit_chunk, s)
+    if s % chunk:
+        chunk = s  # fall back for odd smoke shapes
+    n = s // chunk
+    w = (params["tok"].T if cfg.tie_embeddings else params["out"]).astype(cfg.compute_dtype)
+
+    xs = x.reshape(b, n, chunk, d).swapaxes(0, 1)            # (n, B, C, d)
+    ls = labels.reshape(b, n, chunk).swapaxes(0, 1)          # (n, B, C)
+    if mask is None:
+        ms = jnp.ones((n, b, chunk), jnp.float32)
+    else:
+        ms = mask.reshape(b, n, chunk).swapaxes(0, 1).astype(jnp.float32)
+
+    def body(carry, inp):
+        xc, lc, mc = inp
+        logits = jnp.einsum("bcd,dv->bcv", xc, w).astype(jnp.float32)
+        logits = constrain(logits, ("batch", None, "vocab"))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mc
+        return carry + jnp.sum(nll), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ls, ms))
+    denom = jnp.maximum(jnp.sum(ms), 1.0)
+    return total / denom

@@ -1,0 +1,244 @@
+"""Mamba-2 (SSD — state-space duality) layer, TPU-friendly chunked form.
+
+Training/prefill uses the chunked SSD algorithm: within-chunk quadratic
+(matmul-heavy, MXU-friendly) + an inter-chunk ``lax.scan`` over the running
+state — the standard TPU adaptation of the Mamba-2 recurrence.  Decode is a
+single-step state update with O(1) memory in sequence length, which is what
+makes the ``long_500k`` shape runnable for SSM/hybrid architectures.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.models.common import ModelConfig, ParamSpec, SSMConfig
+from repro.models.layers import rmsnorm
+
+
+def ssm_specs(cfg: ModelConfig, d_model: Optional[int] = None) -> Dict[str, ParamSpec]:
+    s = cfg.ssm
+    assert s is not None
+    d = d_model or cfg.d_model
+    din = s.d_inner(d)
+    h = s.n_heads(d)
+    gn = s.n_groups * s.d_state
+    dt = cfg.param_dtype
+    return {
+        "wz": ParamSpec((d, din), ("embed", "mlp"), dt, "scaled"),
+        "wx": ParamSpec((d, din), ("embed", "mlp"), dt, "scaled"),
+        "wB": ParamSpec((d, gn), ("embed", None), dt, "scaled"),
+        "wC": ParamSpec((d, gn), ("embed", None), dt, "scaled"),
+        "wdt": ParamSpec((d, h), ("embed", "ssm_heads"), dt, "scaled"),
+        "conv_x": ParamSpec((s.conv_width, din), (None, "mlp"), dt, "scaled"),
+        "conv_B": ParamSpec((s.conv_width, gn), (None, None), dt, "scaled"),
+        "conv_C": ParamSpec((s.conv_width, gn), (None, None), dt, "scaled"),
+        "A_log": ParamSpec((h,), ("ssm_heads",), jnp.float32, "zeros"),
+        "D": ParamSpec((h,), ("ssm_heads",), jnp.float32, "ones"),
+        "dt_bias": ParamSpec((h,), ("ssm_heads",), jnp.float32, "zeros"),
+        "norm": ParamSpec((din,), ("mlp",), jnp.float32, "ones"),
+        "out": ParamSpec((din, d), ("mlp", "embed"), dt, "scaled"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv over the sequence dim via shifted adds.
+
+    x: (B, S, C); w: (W, C).  Width is tiny (4), so four shifted
+    element-wise multiplies beat a general conv lowering on TPU.
+    """
+    width = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, width):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1], :]
+        out = out + shifted * w[width - 1 - i]
+    return out
+
+
+def _conv_step(x_t: jax.Array, conv_state: jax.Array, w: jax.Array):
+    """Single decode step of the causal conv.  x_t: (B, C); state: (B, W-1, C)."""
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B, W, C)
+    out = jnp.einsum("bwc,wc->bc", window, w)
+    return out, window[:, 1:, :]
+
+
+def ssd_chunked(
+    x: jax.Array,        # (B, S, H, P)
+    dt: jax.Array,       # (B, S, H) — post-softplus
+    A: jax.Array,        # (H,) — negative
+    B_: jax.Array,       # (B, S, G, N)
+    C_: jax.Array,       # (B, S, G, N)
+    chunk: int,
+    initial_state: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.  Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    b, s, h, p = x.shape
+    g, n = B_.shape[2], B_.shape[3]
+    hg = h // g
+    q = min(chunk, s)
+    if s % q:
+        q = s
+    nc = s // q
+
+    def split(t, extra_shape):
+        return t.reshape((b, nc, q) + extra_shape).swapaxes(0, 1)
+
+    xc = split(x, (h, p))              # (nc, B, Q, H, P)
+    dtc = split(dt, (h,)).astype(jnp.float32)
+    Bc = split(B_, (g, n))
+    Cc = split(C_, (g, n))
+
+    state0 = (
+        initial_state
+        if initial_state is not None
+        else jnp.zeros((b, h, p, n), jnp.float32)
+    )
+
+    def body(state, inp):
+        x_, dt_, b_, c_ = inp
+        x_ = constrain(x_, ("batch", None, "ssm_heads", None))
+        state = constrain(state, ("batch", "ssm_heads", None, None))
+        da = dt_ * A                                   # (B,Q,H), negative
+        cs = jnp.cumsum(da, axis=1)                    # inclusive cumsum
+        # intra-chunk: L[i,j] = exp(cs[i]-cs[j]) for i >= j.  Mask BEFORE the
+        # exp: the i<j entries are positive and exp-overflow to inf, which
+        # would poison the backward pass through the where (NaN grads).
+        seg = cs[:, :, None, :] - cs[:, None, :, :]    # (B,Q,Q,H)
+        causal = jnp.tril(jnp.ones((q, q), bool))
+        L = jnp.exp(jnp.where(causal[None, :, :, None], seg, -1e30))
+        cb = jnp.einsum("bqgn,bkgn->bgqk", c_, b_).astype(jnp.float32)
+        # expand groups to heads: head h belongs to group h // hg
+        cb_h = jnp.repeat(cb, hg, axis=1).transpose(0, 2, 3, 1)  # (B,Q,K,H)
+        m = cb_h * L * dt_[:, None, :, :]
+        y_intra = jnp.einsum(
+            "bqkh,bkhp->bqhp", m.astype(x_.dtype), x_
+        ).astype(jnp.float32)
+        # inter-chunk: contribution of the carried state
+        c_h = jnp.repeat(c_, hg, axis=2)               # (B,Q,H,N)
+        y_inter = jnp.einsum(
+            "bqhn,bhpn->bqhp", (c_h.astype(jnp.float32) * jnp.exp(cs)[..., None]), state
+        )
+        # state update
+        decay_out = jnp.exp(cs[:, -1, None, :] - cs)   # (B,Q,H)
+        b_h = jnp.repeat(b_, hg, axis=2)               # (B,Q,H,N)
+        dstate = jnp.einsum(
+            "bqhn,bqhp->bhpn",
+            b_h.astype(jnp.float32) * (dt_ * decay_out)[..., None],
+            x_.astype(jnp.float32),
+        )
+        state = jnp.exp(cs[:, -1])[:, :, None, None] * state + dstate
+        return state, (y_intra + y_inter).astype(x.dtype)
+
+    # remat the chunk body: without this, backward-of-scan stacks the
+    # (B,Q,Q,H) intra-chunk decay/score tensors for every chunk x layer
+    # (measured 30%+ of mamba2 train HBM traffic); recomputing them per
+    # chunk costs ~1 extra intra-chunk pass of cheap elementwise work.
+    final_state, ys = jax.lax.scan(jax.checkpoint(body), state0, (xc, dtc, Bc, Cc))
+    y = ys.swapaxes(0, 1).reshape(b, s, h, p)
+    return y, final_state
+
+
+def ssm_forward(
+    params: Dict[str, jax.Array],
+    x: jax.Array,             # (B, S, d_model)
+    cfg: ModelConfig,
+    d_model: Optional[int] = None,
+) -> jax.Array:
+    """Full Mamba-2 mixer for training / prefill."""
+    s_cfg = cfg.ssm
+    d = d_model or cfg.d_model
+    din = s_cfg.d_inner(d)
+    h = s_cfg.n_heads(d)
+    p = s_cfg.head_dim
+    g, n = s_cfg.n_groups, s_cfg.d_state
+
+    z = jnp.einsum("bsd,de->bse", x, params["wz"])
+    xi = jnp.einsum("bsd,de->bse", x, params["wx"])
+    Bv = jnp.einsum("bsd,de->bse", x, params["wB"])
+    Cv = jnp.einsum("bsd,de->bse", x, params["wC"])
+    dt = jnp.einsum("bsd,dh->bsh", x, params["wdt"]).astype(jnp.float32)
+
+    xi = jax.nn.silu(_causal_conv(xi, params["conv_x"]).astype(jnp.float32)).astype(x.dtype)
+    Bv = jax.nn.silu(_causal_conv(Bv, params["conv_B"]).astype(jnp.float32)).astype(x.dtype)
+    Cv = jax.nn.silu(_causal_conv(Cv, params["conv_C"]).astype(jnp.float32)).astype(x.dtype)
+    xi = constrain(xi, ("batch", "seq", "mlp"))
+
+    dt = jax.nn.softplus(dt + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    b, s = x.shape[:2]
+    y, _ = ssd_chunked(
+        xi.reshape(b, s, h, p), dt, A,
+        Bv.reshape(b, s, g, n), Cv.reshape(b, s, g, n),
+        chunk=s_cfg.chunk,
+    )
+    y = y + xi.reshape(b, s, h, p) * params["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(b, s, din)
+    # gated RMSNorm (Mamba-2 style)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), params["norm"], cfg.rms_eps)
+    return jnp.einsum("bse,ed->bsd", y, params["out"])
+
+
+def ssm_init_cache(cfg: ModelConfig, batch: int, d_model: Optional[int] = None, dtype=jnp.float32):
+    s = cfg.ssm
+    d = d_model or cfg.d_model
+    din = s.d_inner(d)
+    h = s.n_heads(d)
+    gn = s.n_groups * s.d_state
+    return {
+        "state": jnp.zeros((batch, h, s.head_dim, s.d_state), jnp.float32),
+        "conv_x": jnp.zeros((batch, s.conv_width - 1, din), dtype),
+        "conv_B": jnp.zeros((batch, s.conv_width - 1, gn), dtype),
+        "conv_C": jnp.zeros((batch, s.conv_width - 1, gn), dtype),
+    }
+
+
+def ssm_decode_step(
+    params: Dict[str, jax.Array],
+    x: jax.Array,             # (B, 1, d_model)
+    cache: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    d_model: Optional[int] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """O(1)-state decode step."""
+    s_cfg = cfg.ssm
+    d = d_model or cfg.d_model
+    din = s_cfg.d_inner(d)
+    h = s_cfg.n_heads(d)
+    p = s_cfg.head_dim
+    g, n = s_cfg.n_groups, s_cfg.d_state
+    hg = h // g
+
+    xt = x[:, 0, :]
+    z = xt @ params["wz"]
+    xi = xt @ params["wx"]
+    Bv = xt @ params["wB"]
+    Cv = xt @ params["wC"]
+    dt = (xt @ params["wdt"]).astype(jnp.float32)
+
+    xi, conv_x = _conv_step(xi, cache["conv_x"], params["conv_x"])
+    Bv, conv_B = _conv_step(Bv, cache["conv_B"], params["conv_B"])
+    Cv, conv_C = _conv_step(Cv, cache["conv_C"], params["conv_C"])
+    xi = jax.nn.silu(xi.astype(jnp.float32))
+    Bv = jax.nn.silu(Bv.astype(jnp.float32))
+    Cv = jax.nn.silu(Cv.astype(jnp.float32))
+
+    dt = jax.nn.softplus(dt + params["dt_bias"])          # (B,H)
+    A = -jnp.exp(params["A_log"])                          # (H,)
+    da = jnp.exp(dt * A)                                   # (B,H)
+
+    xh = xi.reshape(-1, h, p)
+    Bh = jnp.repeat(Bv.reshape(-1, g, n), hg, axis=1)      # (B,H,N)
+    Ch = jnp.repeat(Cv.reshape(-1, g, n), hg, axis=1)
+
+    state = cache["state"] * da[:, :, None, None] + jnp.einsum(
+        "bhn,bhp,bh->bhpn", Bh, xh, dt
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch) + xh * params["D"][None, :, None]
+    y = y.reshape(-1, din).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), params["norm"], cfg.rms_eps)
+    out = (y @ params["out"])[:, None, :]
+    new_cache = {"state": state, "conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C}
+    return out, new_cache

@@ -1,0 +1,100 @@
+"""Pure SSM language model (Mamba-2): attention-free, FFN-free blocks."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, ssm as ssm_lib
+from repro.models.common import ModelConfig, stack_tree
+from repro.models.hybrid import _ssm_prefill_with_state
+from repro.models.transformer import DecoderLM
+
+
+class SSMLM(DecoderLM):
+    def layer_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        return {
+            "ln1": layers.rmsnorm_spec(cfg.d_model),
+            "mixer": ssm_lib.ssm_specs(cfg),
+        }
+
+    def param_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        return {
+            "embed": layers.embed_specs(cfg),
+            "layers": stack_tree(self.layer_specs(), cfg.num_layers),
+            "ln_f": layers.rmsnorm_spec(cfg.d_model),
+        }
+
+    def backbone(self, params, x, positions):
+        cfg = self.cfg
+
+        def body(h, lp):
+            hn = layers.rmsnorm(h, lp["ln1"], cfg.rms_eps)
+            return h + ssm_lib.ssm_forward(lp["mixer"], hn, cfg), None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body_fn, x, params["layers"])
+        return layers.rmsnorm(x, params["ln_f"], cfg.rms_eps), jnp.zeros((), jnp.float32)
+
+    # -- caches ----------------------------------------------------------------
+
+    def abstract_cache(self, batch: int, seq: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        s_cfg = cfg.ssm
+        l = cfg.num_layers
+        din = s_cfg.d_inner(cfg.d_model)
+        h = s_cfg.n_heads(cfg.d_model)
+        gn = s_cfg.n_groups * s_cfg.d_state
+        dt = cfg.compute_dtype
+        return {
+            "state": jax.ShapeDtypeStruct((l, batch, h, s_cfg.head_dim, s_cfg.d_state), jnp.float32),
+            "conv_x": jax.ShapeDtypeStruct((l, batch, s_cfg.conv_width - 1, din), dt),
+            "conv_B": jax.ShapeDtypeStruct((l, batch, s_cfg.conv_width - 1, gn), dt),
+            "conv_C": jax.ShapeDtypeStruct((l, batch, s_cfg.conv_width - 1, gn), dt),
+        }
+
+    def cache_logical_axes(self) -> Dict[str, Tuple]:
+        return {
+            "state": ("stack", "batch", "ssm_heads", None, None),
+            "conv_x": ("stack", "batch", None, "mlp"),
+            "conv_B": ("stack", "batch", None, None),
+            "conv_C": ("stack", "batch", None, None),
+        }
+
+    # -- serving ----------------------------------------------------------------
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = layers.embed_tokens(params["embed"], tokens, cfg)
+
+        def body(h, lp):
+            hn = layers.rmsnorm(h, lp["ln1"], cfg.rms_eps)
+            mix, state, cx, cb, cc = _ssm_prefill_with_state(lp["mixer"], hn, cfg)
+            return h + mix, {"state": state, "conv_x": cx, "conv_B": cb, "conv_C": cc}
+
+        x, cache = jax.lax.scan(body, x, params["layers"])
+        x = layers.rmsnorm(x, params["ln_f"], cfg.rms_eps)
+        logits = layers.output_logits(params["embed"], x[:, -1:, :], cfg)
+        return logits, cache
+
+    def decode_step(self, params, batch):
+        cfg = self.cfg
+        token, cache = batch["token"], batch["cache"]
+        x = layers.embed_tokens(params["embed"], token, cfg)
+
+        def body(h, inp):
+            lp, state, cx, cb, cc = inp
+            hn = layers.rmsnorm(h, lp["ln1"], cfg.rms_eps)
+            sub = {"state": state, "conv_x": cx, "conv_B": cb, "conv_C": cc}
+            mix, sub = ssm_lib.ssm_decode_step(lp["mixer"], hn, sub, cfg)
+            return h + mix, sub
+
+        xs = (params["layers"], cache["state"], cache["conv_x"], cache["conv_B"], cache["conv_C"])
+        x, new_cache = jax.lax.scan(body, x, xs)
+        x = layers.rmsnorm(x, params["ln_f"], cfg.rms_eps)
+        logits = layers.output_logits(params["embed"], x, cfg)
+        return logits, new_cache

@@ -1,0 +1,279 @@
+"""Decoder-only LM covering the dense / GQA / MLA / MoE / VLM families.
+
+One definition, scan-over-layers (compile time constant in depth), three
+entry points per model:
+
+  * ``loss(params, batch)``       — training objective (chunked CE + MoE aux)
+  * ``prefill(params, batch)``    — forward + KV-cache emission
+  * ``decode_step(params, state)``— one-token serve step over the cache
+
+Caches are stacked along a leading "stack" (layer) dimension so the decode
+step is also a single ``lax.scan``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.models import attention as attn
+from repro.models import layers, moe as moe_lib
+from repro.models.common import (
+    ModelConfig,
+    ParamSpec,
+    abstract_params,
+    init_params,
+    stack_tree,
+)
+
+AUX_LOSS_COEF = 0.01
+
+
+class DecoderLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- parameters ---------------------------------------------------------
+
+    def layer_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        specs: Dict[str, Any] = {
+            "ln1": layers.rmsnorm_spec(cfg.d_model),
+            "ln2": layers.rmsnorm_spec(cfg.d_model),
+        }
+        specs["attn"] = attn.mla_specs(cfg) if cfg.mla else attn.gqa_specs(cfg)
+        if cfg.moe:
+            specs["ffn"] = moe_lib.moe_specs(cfg)
+        else:
+            specs["ffn"] = layers.mlp_specs(cfg.d_model, cfg.d_ff, cfg.param_dtype)
+        return specs
+
+    def param_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        return {
+            "embed": layers.embed_specs(cfg),
+            "layers": stack_tree(self.layer_specs(), cfg.num_layers),
+            "ln_f": layers.rmsnorm_spec(cfg.d_model),
+        }
+
+    def init(self, key: jax.Array) -> Dict[str, Any]:
+        return init_params(self.param_specs(), key)
+
+    def abstract(self) -> Dict[str, Any]:
+        return abstract_params(self.param_specs())
+
+    # -- input specs (dry-run stand-ins) ------------------------------------
+
+    def input_specs(self, batch: int, seq: int, mode: str = "train") -> Dict[str, Any]:
+        cfg = self.cfg
+        ii32 = jnp.int32
+        if mode == "train":
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((batch, seq), ii32),
+                "labels": jax.ShapeDtypeStruct((batch, seq), ii32),
+            }
+            if cfg.frontend == "vision":
+                specs["image_embeds"] = jax.ShapeDtypeStruct(
+                    (batch, cfg.num_patches, cfg.d_model), cfg.compute_dtype
+                )
+            return specs
+        if mode == "prefill":
+            specs = {"tokens": jax.ShapeDtypeStruct((batch, seq), ii32)}
+            if cfg.frontend == "vision":
+                specs["image_embeds"] = jax.ShapeDtypeStruct(
+                    (batch, cfg.num_patches, cfg.d_model), cfg.compute_dtype
+                )
+            return specs
+        if mode == "decode":
+            return {
+                "token": jax.ShapeDtypeStruct((batch, 1), ii32),
+                "pos": jax.ShapeDtypeStruct((), ii32),
+                "cache": self.abstract_cache(batch, seq),
+            }
+        raise ValueError(mode)
+
+    def abstract_cache(self, batch: int, seq: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        l = cfg.num_layers
+        dt = cfg.compute_dtype
+        if cfg.mla:
+            m = cfg.mla
+            return {
+                "c_kv": jax.ShapeDtypeStruct((l, batch, seq, m.kv_lora_rank), dt),
+                "k_rope": jax.ShapeDtypeStruct((l, batch, seq, m.qk_rope_dim), dt),
+            }
+        return {
+            "k": jax.ShapeDtypeStruct((l, batch, seq, cfg.num_kv_heads, cfg.head_dim), dt),
+            "v": jax.ShapeDtypeStruct((l, batch, seq, cfg.num_kv_heads, cfg.head_dim), dt),
+        }
+
+    def init_cache(self, batch: int, seq: int) -> Dict[str, Any]:
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), self.abstract_cache(batch, seq)
+        )
+
+    def cache_logical_axes(self) -> Dict[str, Tuple]:
+        if self.cfg.mla:
+            return {
+                "c_kv": ("stack", "batch", "kv_seq", None),
+                "k_rope": ("stack", "batch", "kv_seq", None),
+            }
+        return {
+            "k": ("stack", "batch", "kv_seq", "kv_heads", None),
+            "v": ("stack", "batch", "kv_seq", "kv_heads", None),
+        }
+
+    # -- forward ------------------------------------------------------------
+
+    def _layer_train(self, lp: Dict[str, Any], x: jax.Array, positions: jax.Array):
+        cfg = self.cfg
+        # sequence parallelism: the residual stream and norm outputs live
+        # seq-sharded over the model axis; XLA turns the TP all-reduces into
+        # reduce-scatter + all-gather pairs around the matmul regions while
+        # all elementwise/norm traffic shrinks by the model-axis size.
+        x = constrain(x, ("batch", "seq_sp", None))
+        h = layers.rmsnorm(x, lp["ln1"], cfg.rms_eps)
+        h = constrain(h, ("batch", "seq_sp", None))
+        if cfg.mla:
+            ctx, _ = attn.mla_prefill_attention(lp["attn"], h, positions, cfg, cfg.attn_chunk)
+        else:
+            q, k, v = attn.gqa_project_qkv(lp["attn"], h, positions, cfg)
+            o = attn.blocked_attention(q, k, v, causal=True, chunk=cfg.attn_chunk, k_chunk=cfg.attn_k_chunk)
+            ctx = jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+        x = constrain(x + ctx, ("batch", "seq_sp", None))
+        h = constrain(
+            layers.rmsnorm(x, lp["ln2"], cfg.rms_eps), ("batch", "seq_sp", None)
+        )
+        if cfg.moe:
+            f, aux = moe_lib.moe_forward(lp["ffn"], h, cfg)
+        else:
+            f, aux = layers.mlp(lp["ffn"], h), jnp.zeros((), jnp.float32)
+        return constrain(x + f, ("batch", "seq_sp", None)), aux
+
+    def backbone(self, params: Dict[str, Any], x: jax.Array, positions: jax.Array):
+        cfg = self.cfg
+
+        def body(carry, lp):
+            h, aux = carry
+            h2, aux_i = self._layer_train(lp, h, positions)
+            return (h2, aux + aux_i), None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)), params["layers"])
+        return layers.rmsnorm(x, params["ln_f"], cfg.rms_eps), aux
+
+    def embed_inputs(self, params, batch: Dict[str, jax.Array]) -> jax.Array:
+        cfg = self.cfg
+        x = layers.embed_tokens(params["embed"], batch["tokens"], cfg)
+        if cfg.frontend == "vision" and "image_embeds" in batch:
+            p = cfg.num_patches
+            img = batch["image_embeds"].astype(cfg.compute_dtype)
+            x = jnp.concatenate([img, x[:, p:, :]], axis=1)
+        return x
+
+    def loss(self, params: Dict[str, Any], batch: Dict[str, jax.Array]) -> jax.Array:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+        x = self.embed_inputs(params, batch)
+        x, aux = self.backbone(params, x, positions)
+        mask = None
+        if cfg.frontend == "vision":
+            mask = (jnp.arange(tokens.shape[1]) >= cfg.num_patches)[None, :].astype(jnp.float32)
+            mask = jnp.broadcast_to(mask, tokens.shape)
+        ce = layers.chunked_softmax_xent(params["embed"], x, batch["labels"], cfg, mask)
+        return ce + AUX_LOSS_COEF * aux
+
+    # -- serving ------------------------------------------------------------
+
+    def prefill(self, params: Dict[str, Any], batch: Dict[str, jax.Array]):
+        """Forward over the prompt, emitting the stacked KV cache."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        x = self.embed_inputs(params, batch)
+
+        def body(h, lp):
+            h = constrain(h, ("batch", "seq_sp", None))
+            hn = constrain(
+                layers.rmsnorm(h, lp["ln1"], cfg.rms_eps), ("batch", "seq_sp", None)
+            )
+            if cfg.mla:
+                ctx, (c_kv, k_rope) = attn.mla_prefill_attention(
+                    lp["attn"], hn, positions, cfg, cfg.attn_chunk
+                )
+                cache = {"c_kv": c_kv.astype(cfg.compute_dtype),
+                         "k_rope": k_rope.astype(cfg.compute_dtype)}
+            else:
+                q, k, v = attn.gqa_project_qkv(lp["attn"], hn, positions, cfg)
+                o = attn.blocked_attention(q, k, v, causal=True, chunk=cfg.attn_chunk, k_chunk=cfg.attn_k_chunk)
+                ctx = jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+                cache = {"k": k.astype(cfg.compute_dtype), "v": v.astype(cfg.compute_dtype)}
+            h = constrain(h + ctx, ("batch", "seq_sp", None))
+            hn = constrain(
+                layers.rmsnorm(h, lp["ln2"], cfg.rms_eps), ("batch", "seq_sp", None)
+            )
+            if cfg.moe:
+                f, _ = moe_lib.moe_forward(lp["ffn"], hn, cfg)
+            else:
+                f = layers.mlp(lp["ffn"], hn)
+            return constrain(h + f, ("batch", "seq_sp", None)), cache
+
+        x, cache = jax.lax.scan(body, x, params["layers"])
+        x = layers.rmsnorm(x, params["ln_f"], cfg.rms_eps)
+        logits = layers.output_logits(params["embed"], x[:, -1:, :], cfg)
+        return logits, cache
+
+    def decode_step(self, params: Dict[str, Any], batch: Dict[str, Any]):
+        """One-token decode against a (stack, B, S, ...) cache."""
+        cfg = self.cfg
+        token, pos, cache = batch["token"], batch["pos"], batch["cache"]
+        x = layers.embed_tokens(params["embed"], token, cfg)
+        positions = jnp.broadcast_to(pos, token.shape)
+
+        def body(h, inp):
+            if cfg.mla:
+                lp, c_kv, k_rope = inp
+                hn = layers.rmsnorm(h, lp["ln1"], cfg.rms_eps)
+                new_ckv, new_krope = attn.mla_compress(lp["attn"], hn, positions, cfg)
+                c_kv = jax.lax.dynamic_update_slice(
+                    c_kv, new_ckv.astype(c_kv.dtype), (0, pos, 0)
+                )
+                k_rope = jax.lax.dynamic_update_slice(
+                    k_rope, new_krope.astype(k_rope.dtype), (0, pos, 0)
+                )
+                ctx = attn.mla_decode_attention(lp["attn"], hn, pos, c_kv, k_rope, cfg)
+                new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+            else:
+                lp, k_c, v_c = inp
+                hn = layers.rmsnorm(h, lp["ln1"], cfg.rms_eps)
+                q, k, v = attn.gqa_project_qkv(lp["attn"], hn, positions, cfg)
+                k_c = jax.lax.dynamic_update_slice(
+                    k_c, k.astype(k_c.dtype), (0, pos, 0, 0)
+                )
+                v_c = jax.lax.dynamic_update_slice(
+                    v_c, v.astype(v_c.dtype), (0, pos, 0, 0)
+                )
+                o = attn.decode_attention(q, k_c, v_c, pos)
+                ctx = jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+                new_cache = {"k": k_c, "v": v_c}
+            h = h + ctx
+            hn = layers.rmsnorm(h, lp["ln2"], cfg.rms_eps)
+            if cfg.moe:
+                f, _ = moe_lib.moe_forward(lp["ffn"], hn, cfg)
+            else:
+                f = layers.mlp(lp["ffn"], hn)
+            return h + f, new_cache
+
+        if cfg.mla:
+            xs = (params["layers"], cache["c_kv"], cache["k_rope"])
+        else:
+            xs = (params["layers"], cache["k"], cache["v"])
+        x, new_cache = jax.lax.scan(body, x, xs)
+        x = layers.rmsnorm(x, params["ln_f"], cfg.rms_eps)
+        logits = layers.output_logits(params["embed"], x, cfg)
+        return logits, new_cache

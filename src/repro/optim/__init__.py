@@ -1,0 +1,10 @@
+from repro.optim.optimizers import (
+    OptimizerConfig,
+    adamw_init,
+    adamw_update,
+    global_norm,
+    clip_by_global_norm,
+    compress_grads,
+    decompress_grads,
+    wsd_schedule,
+)

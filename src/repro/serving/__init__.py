@@ -1,0 +1,1 @@
+from repro.serving.server import BatchingServer, Request, ServerConfig

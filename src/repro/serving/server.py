@@ -1,0 +1,164 @@
+"""Continuous-batching LM server: slot-managed prefill + decode.
+
+Serving-side runtime matching the dry-run ``decode_32k`` shape: a fixed
+pool of B cache slots; arriving requests are prefilled into a free slot
+(cache rows written at their slot index); every engine tick decodes one
+token for all active slots.  Per-slot positions are tracked host-side and
+passed as a vector so heterogeneous sequence lengths coexist in one batch
+(the decode path masks by per-slot position).
+
+This is intentionally a single-process engine (the multi-host version
+shards the same cache over the serving mesh via SERVE_RULES; see
+steps.make_decode_step).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import build_model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (prompt_len,) int32
+    max_new_tokens: int = 16
+    # filled by the server:
+    output: List[int] = dataclasses.field(default_factory=list)
+    submitted_s: float = 0.0
+    first_token_s: Optional[float] = None
+    done_s: Optional[float] = None
+
+
+@dataclasses.dataclass
+class ServerConfig:
+    slots: int = 4
+    cache_len: int = 256
+    eos_id: int = -1                    # -1: never stop early
+
+
+class BatchingServer:
+    def __init__(self, model_cfg: Any, cfg: ServerConfig, seed: int = 0):
+        self.cfg = cfg
+        self.model_cfg = model_cfg
+        self.model = build_model(model_cfg)
+        self.params = self.model.init(jax.random.PRNGKey(seed))
+        self.cache = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.model.abstract_cache(cfg.slots, cfg.cache_len),
+        )
+        self._decode = jax.jit(self.model.decode_step)
+        self._active: Dict[int, Request] = {}      # slot -> request
+        self._pos = np.zeros(cfg.slots, np.int32)  # next write position per slot
+        self._queue: List[Request] = []
+        self._next_token = np.zeros((cfg.slots, 1), np.int32)
+
+    # -- API -----------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        req.submitted_s = time.perf_counter()
+        self._queue.append(req)
+
+    def run(self, max_ticks: int = 1000) -> List[Request]:
+        """Drive the engine until queue + slots drain; returns finished."""
+        finished: List[Request] = []
+        for _ in range(max_ticks):
+            self._admit(finished)
+            if not self._active:
+                if not self._queue:
+                    break
+                continue
+            self._tick(finished)
+        return finished
+
+    # -- internals --------------------------------------------------------------
+
+    def _free_slots(self) -> List[int]:
+        return [s for s in range(self.cfg.slots) if s not in self._active]
+
+    def _admit(self, finished: List[Request]) -> None:
+        """Prefill queued requests into free slots (token-by-token replay:
+        keeps one jitted decode program; a production engine would use the
+        chunked prefill kernel here).  The final replay step's argmax IS the
+        first generated token — emit it here."""
+        for slot in self._free_slots():
+            if not self._queue:
+                return
+            req = self._queue.pop(0)
+            self._active[slot] = req
+            self._pos[slot] = 0
+            for tok in req.prompt:
+                self._write_token(slot, int(tok))
+            self._emit(slot, int(self._next_token[slot, 0]), finished)
+
+    def _write_token(self, slot: int, token: int) -> None:
+        """Advance one position of one slot through the decode program."""
+        tok_vec = np.zeros((self.cfg.slots, 1), np.int32)
+        tok_vec[slot, 0] = token
+        batch = {
+            "token": jnp.asarray(tok_vec),
+            "pos": jnp.asarray(int(self._pos[slot]), jnp.int32),
+            "cache": self.cache,
+        }
+        logits, self.cache = self._decode(self.params, batch)
+        self._pos[slot] += 1
+        self._next_token[slot, 0] = int(np.argmax(np.asarray(logits[slot, 0])))
+
+    def _tick(self, finished: List[Request]) -> None:
+        """One decode step for every active slot (true continuous batching:
+        all slots advance in a single jitted call when positions align; the
+        general unequal-position case falls back to per-slot steps)."""
+        positions = {self._pos[s] for s in self._active}
+        if len(positions) == 1:
+            pos = positions.pop()
+            batch = {
+                "token": jnp.asarray(self._next_token),
+                "pos": jnp.asarray(int(pos), jnp.int32),
+                "cache": self.cache,
+            }
+            logits, self.cache = self._decode(self.params, batch)
+            toks = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+            for s in list(self._active):
+                self._pos[s] += 1
+                self._emit(s, int(toks[s]), finished)
+            self._next_token = toks[:, None]
+        else:
+            for s in list(self._active):
+                self._write_token(s, int(self._next_token[s, 0]))
+                self._emit(s, int(self._next_token[s, 0]), finished)
+
+    def _emit(self, slot: int, token: int, finished: List[Request]) -> None:
+        req = self._active[slot]
+        if req.first_token_s is None:
+            req.first_token_s = time.perf_counter()
+        req.output.append(token)
+        done = (
+            len(req.output) >= req.max_new_tokens
+            or token == self.cfg.eos_id
+            or self._pos[slot] >= self.cfg.cache_len - 1
+        )
+        if done:
+            req.done_s = time.perf_counter()
+            finished.append(req)
+            del self._active[slot]
+
+    # -- metrics -------------------------------------------------------------------
+
+    @staticmethod
+    def latency_report(reqs: List[Request]) -> Dict[str, float]:
+        ttft = [r.first_token_s - r.submitted_s for r in reqs if r.first_token_s]
+        e2e = [r.done_s - r.submitted_s for r in reqs if r.done_s]
+        toks = sum(len(r.output) for r in reqs)
+        wall = max((r.done_s or 0) for r in reqs) - min(r.submitted_s for r in reqs)
+        return {
+            "requests": len(reqs),
+            "ttft_p50_s": float(np.percentile(ttft, 50)) if ttft else 0.0,
+            "e2e_p50_s": float(np.percentile(e2e, 50)) if e2e else 0.0,
+            "decode_tok_per_s": toks / wall if wall > 0 else 0.0,
+        }

@@ -1,0 +1,157 @@
+"""Training runtime: DPP-fed, fault-tolerant, elastic.
+
+The loop every trainer runs:
+  batch = dpp_client.get_batch()   (data-stall accounted, Table 7 style)
+  state = train_step(state, batch) (jitted, sharded)
+  periodic checkpoint (atomic, resumable)
+
+Fault tolerance: resume from the newest complete checkpoint (trainer
+crash), DPP master checkpoint/restore + stateless worker restart (data
+plane), and ``remesh`` for elastic scaling — re-lower the step on a new
+device count and re-shard the state (parameters are resharded by device_put
+under the new mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.distributed.context import sharding_context
+from repro.distributed.sharding import TRAIN_RULES
+from repro.models import build_model
+from repro.models.common import partition_specs
+from repro.optim import OptimizerConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 50
+    log_every: int = 10
+    max_steps: int = 200
+    batch_timeout_s: float = 30.0
+
+
+@dataclasses.dataclass
+class StepMetrics:
+    step: int
+    loss: float
+    grad_norm: float
+    step_time_s: float
+    stall_s: float
+
+
+class Trainer:
+    def __init__(
+        self,
+        model_cfg: Any,
+        opt_cfg: Optional[OptimizerConfig] = None,
+        trainer_cfg: Optional[TrainerConfig] = None,
+        mesh: Optional[Any] = None,
+        rules=TRAIN_RULES,
+    ):
+        self.model_cfg = model_cfg
+        self.model = build_model(model_cfg)
+        self.opt_cfg = opt_cfg or OptimizerConfig()
+        self.cfg = trainer_cfg or TrainerConfig()
+        self.mesh = mesh
+        self.rules = rules
+        self.ckpt = (
+            CheckpointManager(self.cfg.checkpoint_dir)
+            if self.cfg.checkpoint_dir
+            else None
+        )
+        self._train_step = self._build_step()
+        self.history: list[StepMetrics] = []
+
+    # -- step ------------------------------------------------------------
+
+    def _build_step(self) -> Callable:
+        model, opt_cfg, mesh, rules = self.model, self.opt_cfg, self.mesh, self.rules
+
+        def train_step(params, opt_state, batch):
+            def run():
+                loss, grads = jax.value_and_grad(model.loss)(params, batch)
+                new_p, new_o, gnorm = adamw_update(params, grads, opt_state, opt_cfg)
+                return new_p, new_o, loss, gnorm
+
+            if mesh is not None:
+                with sharding_context(mesh, rules):
+                    return run()
+            return run()
+
+        return jax.jit(train_step, donate_argnums=(0, 1))
+
+    def init_state(self, seed: int = 0) -> Dict[str, Any]:
+        params = self.model.init(jax.random.PRNGKey(seed))
+        if self.mesh is not None:
+            specs = partition_specs(self.model.param_specs(), self.rules, self.mesh)
+            from repro.distributed.sharding import shard_tree
+
+            params = shard_tree(params, specs, self.mesh)
+        return {"params": params, "opt": adamw_init(params, self.opt_cfg), "step": 0}
+
+    # -- fault tolerance ---------------------------------------------------
+
+    def maybe_restore(self, state: Dict[str, Any]) -> Dict[str, Any]:
+        if self.ckpt and self.ckpt.latest_step() is not None:
+            step, restored = self.ckpt.restore(
+                {"params": state["params"], "opt": state["opt"]}
+            )
+            return {"params": restored["params"], "opt": restored["opt"], "step": step}
+        return state
+
+    def remesh(self, new_mesh) -> None:
+        """Elastic scaling: rebuild the jitted step for a new device mesh.
+        Existing state is resharded lazily on the next device_put."""
+        self.mesh = new_mesh
+        self._train_step = self._build_step()
+
+    # -- loop -----------------------------------------------------------------
+
+    def fit(
+        self,
+        batches: Iterable[Dict[str, np.ndarray]],
+        state: Optional[Dict[str, Any]] = None,
+    ) -> Dict[str, Any]:
+        state = state or self.init_state()
+        state = self.maybe_restore(state)
+        params, opt, step = state["params"], state["opt"], state["step"]
+
+        it = iter(batches)
+        while step < self.cfg.max_steps:
+            t0 = time.perf_counter()
+            try:
+                batch = next(it)
+            except StopIteration:
+                break
+            if batch is None:
+                continue
+            t1 = time.perf_counter()
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            params, opt, loss, gnorm = self._train_step(params, opt, batch)
+            step += 1
+            t2 = time.perf_counter()
+            m = StepMetrics(
+                step=step, loss=float(loss), grad_norm=float(gnorm),
+                step_time_s=t2 - t1, stall_s=t1 - t0,
+            )
+            self.history.append(m)
+            if self.ckpt and step % self.cfg.checkpoint_every == 0:
+                self.ckpt.save(step, {"params": params, "opt": opt})
+        if self.ckpt:
+            self.ckpt.save(step, {"params": params, "opt": opt})
+        return {"params": params, "opt": opt, "step": step}
+
+    # -- reporting ----------------------------------------------------------------
+
+    def stall_fraction(self) -> float:
+        tot = sum(m.step_time_s + m.stall_s for m in self.history)
+        stall = sum(m.stall_s for m in self.history)
+        return stall / tot if tot else 0.0

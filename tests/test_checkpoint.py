@@ -1,0 +1,46 @@
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+
+
+def _state():
+    return {
+        "params": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                   "e": jnp.ones((4, 2), jnp.bfloat16)},
+        "opt": {"mu": {"w": jnp.zeros((3, 4))}, "step": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    s = _state()
+    save_pytree(s, str(tmp_path / "ck"))
+    out = load_pytree(s, str(tmp_path / "ck"))
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]), np.asarray(s["params"]["w"]))
+    assert out["params"]["e"].dtype == np.dtype("bfloat16") or str(out["params"]["e"].dtype) == "bfloat16"
+    assert int(out["opt"]["step"]) == 7
+
+
+def test_manager_latest_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    s = _state()
+    for step in (10, 20, 30):
+        mgr.save(step, s)
+    assert mgr.all_steps() == [20, 30]
+    assert mgr.latest_step() == 30
+    step, out = mgr.restore(s)
+    assert step == 30
+
+
+def test_incomplete_checkpoint_ignored(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    s = _state()
+    mgr.save(10, s)
+    # simulate crash mid-save: dir without manifest
+    os.makedirs(tmp_path / "step_00000020")
+    assert mgr.latest_step() == 10
+    step, _ = mgr.restore(s)
+    assert step == 10

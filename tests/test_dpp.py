@@ -1,0 +1,121 @@
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import dwrf
+from repro.core.datagen import DataGenConfig
+from repro.core.dpp import AutoScaler, DPPMaster, DPPSession, SessionSpec
+from repro.core.schema import make_schema
+from repro.core.transforms import default_dlrm_pipeline
+from repro.core.warehouse import Warehouse
+
+
+def _table(n_partitions=2, rows=1024):
+    s = make_schema("dpt", 20, 6, seed=0)
+    wh = Warehouse()
+    t = wh.create_table(s)
+    t.generate(n_partitions, DataGenConfig(rows_per_partition=rows, seed=1),
+               dwrf.DwrfWriterOptions(flattened=True, stripe_rows=256))
+    return t
+
+
+def _spec(t, **kw):
+    dense = t.schema.dense_ids[:6]
+    sparse = t.schema.sparse_ids[:3]
+    pipe = default_dlrm_pipeline(dense, sparse, hash_size=500)
+    d = dict(
+        table=t.schema.name, partitions=tuple(t.partitions),
+        feature_ids=tuple(pipe.required_features()),
+        transform_specs=tuple(pipe.specs),
+        batch_size=256, rows_per_split=256,
+        dense_keys=tuple(f"d{f}" for f in dense),
+        sparse_keys=tuple(f"s{f}" for f in sparse),
+        max_ids_per_feature=8,
+    )
+    d.update(kw)
+    return SessionSpec(**d)
+
+
+def test_session_one_epoch_exact_batches():
+    t = _table()
+    sess = DPPSession(_spec(t), t, n_workers=2)
+    batches = sess.run_to_completion(timeout_s=60)
+    assert len(batches) == 2 * 1024 // 256
+    assert batches[0]["dense"].shape == (256, 6)
+    total_rows = sum(b["label"].shape[0] for b in batches)
+    assert total_rows == 2 * 1024
+
+
+def test_worker_failure_restart_completes_epoch():
+    t = _table()
+    # the ONLY worker dies after 2 splits; the monitor must restart it or the
+    # epoch cannot complete
+    sess = DPPSession(_spec(t), t, n_workers=1, lease_s=1.0, monitor_interval_s=0.1)
+    sess.workers[0].fail_after_splits = 2
+    batches = sess.run_to_completion(timeout_s=60)
+    total_rows = sum(b["label"].shape[0] for b in batches)
+    assert total_rows == 2 * 1024
+    assert len(sess.restart_events) >= 1
+
+
+def test_master_checkpoint_restore_resumes():
+    t = _table()
+    spec = _spec(t)
+    rows = {p: t.partitions[p].num_rows for p in spec.partitions}
+    m = DPPMaster(spec, rows)
+    s1 = m.get_split("w0"); m.complete_split("w0", s1.split_id)
+    s2 = m.get_split("w0"); m.complete_split("w0", s2.split_id)
+    ckpt = m.checkpoint()
+    m2 = DPPMaster.restore(ckpt, rows)
+    done, total = m2.progress
+    assert done == 2
+    seen = set()
+    while True:
+        s = m2.get_split("w1")
+        if s is None:
+            break
+        seen.add(s.split_id)
+        m2.complete_split("w1", s.split_id)
+    assert s1.split_id not in seen and s2.split_id not in seen
+    assert m2.finished
+
+
+def test_straggler_lease_redispatch():
+    t = _table(n_partitions=1, rows=512)
+    spec = _spec(t)
+    rows = {p: t.partitions[p].num_rows for p in spec.partitions}
+    m = DPPMaster(spec, rows, lease_s=0.05)
+    s = m.get_split("slow")
+    time.sleep(0.1)   # lease expires; straggler mitigation re-dispatches
+    s2 = m.get_split("fast")
+    assert s2.split_id == s.split_id
+
+
+def test_forget_worker_releases_leases():
+    t = _table(n_partitions=1, rows=512)
+    spec = _spec(t)
+    rows = {p: t.partitions[p].num_rows for p in spec.partitions}
+    m = DPPMaster(spec, rows, lease_s=100.0)
+    s = m.get_split("dead")
+    m.forget_worker("dead")
+    s2 = m.get_split("alive")
+    assert s2.split_id == s.split_id
+
+
+def test_autoscaler_decisions():
+    a = AutoScaler(max_workers=64)
+    assert a.decide(4, buffered_batches=0, mean_cpu_util=0.9, stalls_since_last=3) > 0
+    assert a.decide(4, buffered_batches=100, mean_cpu_util=0.1, stalls_since_last=0) < 0
+    assert a.decide(4, buffered_batches=10, mean_cpu_util=0.6, stalls_since_last=0) == 0
+    # respects max
+    assert a.decide(64, buffered_batches=0, mean_cpu_util=1.0, stalls_since_last=5) == 0
+
+
+def test_autoscaling_session_scales_out():
+    t = _table(n_partitions=2, rows=2048)
+    sess = DPPSession(_spec(t), t, n_workers=1, auto_scale=True,
+                      monitor_interval_s=0.05, max_workers=4)
+    batches = sess.run_to_completion(timeout_s=90)
+    total_rows = sum(b["label"].shape[0] for b in batches)
+    assert total_rows == 2 * 2048

@@ -1,0 +1,57 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze, parse_module
+
+
+def test_scan_trip_count_multiplies_flops():
+    def f(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+    x = jnp.zeros((64, 64), jnp.bfloat16)
+    w = jnp.zeros((10, 64, 64), jnp.bfloat16)
+    c = jax.jit(f).lower(x, w).compile()
+    cost = analyze(c.as_text())
+    assert abs(cost.flops - 2 * 64 ** 3 * 10) / (2 * 64 ** 3 * 10) < 0.01
+
+
+def test_matches_xla_on_loop_free_module():
+    def g(x, w1, w2):
+        h = jax.nn.relu(x @ w1)
+        return jnp.sum(h @ w2)
+    x = jnp.zeros((128, 256), jnp.float32)
+    w1 = jnp.zeros((256, 512), jnp.float32)
+    w2 = jnp.zeros((512, 64), jnp.float32)
+    c = jax.jit(jax.grad(g, argnums=(1, 2))).lower(x, w1, w2).compile()
+    ca = c.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    mine = analyze(c.as_text())
+    assert abs(mine.flops - ca["flops"]) / ca["flops"] < 0.02
+    assert abs(mine.bytes_accessed - ca["bytes accessed"]) / ca["bytes accessed"] < 0.05
+
+
+def test_nested_scan_multipliers():
+    def f(x, w):
+        def outer(c, wi):
+            def inner(c2, _):
+                return jnp.tanh(c2 @ wi), None
+            c2, _ = jax.lax.scan(inner, c, None, length=5)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, w)
+        return y
+    x = jnp.zeros((32, 32), jnp.float32)
+    w = jnp.zeros((4, 32, 32), jnp.float32)
+    c = jax.jit(f).lower(x, w).compile()
+    cost = analyze(c.as_text())
+    expected = 2 * 32 ** 3 * 4 * 5
+    assert abs(cost.flops - expected) / expected < 0.01
+
+
+def test_parse_module_entry():
+    c = jax.jit(lambda x: x + 1).lower(jnp.ones(4)).compile()
+    comps = parse_module(c.as_text())
+    assert any(comp.is_entry for comp in comps.values())

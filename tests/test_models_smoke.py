@@ -1,0 +1,144 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family config,
+one forward/train step on CPU, asserting output shapes + no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfglib
+from repro.models import build_model
+from repro.models.dlrm import DLRMConfig
+
+LM_ARCHS = [a for a in cfglib.ARCH_IDS if a != "dlrm-paper"]
+
+
+def _train_batch(cfg, b, s, key):
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    if cfg.frontend == "vision":
+        batch["image_embeds"] = 0.02 * jax.random.normal(
+            key, (b, cfg.num_patches, cfg.d_model), cfg.compute_dtype
+        )
+    if cfg.frontend == "audio":
+        batch["frames"] = 0.02 * jax.random.normal(key, (b, s, cfg.d_model), cfg.compute_dtype)
+        dec = max(s // 8, 16)
+        dt = jax.random.randint(key, (b, dec), 0, cfg.vocab_size)
+        batch["tokens"], batch["labels"] = dt, jnp.roll(dt, -1, axis=1)
+    return batch
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_train_step_smoke(arch):
+    cfg = cfglib.get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    shape = cfglib.SMOKE_SHAPES["train_4k"]
+    batch = _train_batch(cfg, shape.global_batch, shape.seq_len, jax.random.PRNGKey(1))
+    loss, grads = jax.jit(jax.value_and_grad(model.loss))(params, batch)
+    assert np.isfinite(float(loss))
+    gn = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32)))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_prefill_and_decode_smoke(arch):
+    cfg = cfglib.get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s = 1, 32
+    pre = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (b, s), 0, cfg.vocab_size)}
+    if cfg.frontend == "vision":
+        pre["image_embeds"] = 0.02 * jax.random.normal(
+            jax.random.PRNGKey(3), (b, cfg.num_patches, cfg.d_model), cfg.compute_dtype
+        )
+    if cfg.frontend == "audio":
+        pre["frames"] = 0.02 * jax.random.normal(
+            jax.random.PRNGKey(3), (b, s, cfg.d_model), cfg.compute_dtype
+        )
+        pre["tokens"] = jax.random.randint(jax.random.PRNGKey(4), (b, 8), 0, cfg.vocab_size)
+    logits, cache = jax.jit(model.prefill)(params, pre)
+    assert logits.shape == (b, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    dec = {
+        "token": jnp.ones((b, 1), jnp.int32),
+        "pos": jnp.asarray(3, jnp.int32),
+        "cache": jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                              model.abstract_cache(b, 16)),
+    }
+    lg, new_cache = jax.jit(model.decode_step)(params, dec)
+    assert lg.shape == (b, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(lg, np.float32)).all()
+    assert jax.tree.structure(new_cache) == jax.tree.structure(dec["cache"])
+
+
+def test_dlrm_smoke():
+    cfg = cfglib.get_smoke_config("dlrm-paper")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    specs = model.input_specs(8)
+    batch = {k: jnp.ones(v.shape, v.dtype) for k, v in specs.items()}
+    loss = jax.jit(model.loss)(params, batch)
+    assert np.isfinite(float(loss))
+    ne = model.normalized_entropy(params, batch)
+    assert np.isfinite(float(ne))
+
+
+@pytest.mark.parametrize("arch", cfglib.ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry the exact assigned hyperparameters."""
+    cfg = cfglib.get_config(arch)
+    table = {
+        "mamba2-2.7b": dict(num_layers=64, d_model=2560, vocab_size=50280),
+        "codeqwen1.5-7b": dict(num_layers=32, d_model=4096, num_heads=32,
+                               num_kv_heads=32, d_ff=13440, vocab_size=92416),
+        "llama3-405b": dict(num_layers=126, d_model=16384, num_heads=128,
+                            num_kv_heads=8, d_ff=53248, vocab_size=128256),
+        "qwen2-72b": dict(num_layers=80, d_model=8192, num_heads=64,
+                          num_kv_heads=8, d_ff=29568, vocab_size=152064),
+        "qwen3-8b": dict(num_layers=36, d_model=4096, num_heads=32,
+                         num_kv_heads=8, d_ff=12288, vocab_size=151936),
+        "jamba-1.5-large-398b": dict(num_layers=72, d_model=8192, num_heads=64,
+                                     num_kv_heads=8, d_ff=24576, vocab_size=65536),
+        "llava-next-mistral-7b": dict(num_layers=32, d_model=4096, num_heads=32,
+                                      num_kv_heads=8, d_ff=14336, vocab_size=32000),
+        "deepseek-v2-236b": dict(num_layers=60, d_model=5120, num_heads=128,
+                                 d_ff=1536, vocab_size=102400),
+        "kimi-k2-1t-a32b": dict(num_layers=61, d_model=7168, num_heads=64,
+                                num_kv_heads=8, d_ff=2048, vocab_size=163840),
+        "seamless-m4t-large-v2": dict(num_layers=24, d_model=1024, num_heads=16,
+                                      num_kv_heads=16, d_ff=8192, vocab_size=256206),
+    }
+    if arch == "dlrm-paper":
+        assert isinstance(cfg, DLRMConfig)
+        return
+    for k, v in table[arch].items():
+        assert getattr(cfg, k) == v, (arch, k)
+    if arch == "mamba2-2.7b":
+        assert cfg.ssm.d_state == 128
+    if arch == "jamba-1.5-large-398b":
+        assert cfg.moe.num_experts == 16 and cfg.moe.top_k == 2
+    if arch == "deepseek-v2-236b":
+        assert cfg.mla.kv_lora_rank == 512
+        assert cfg.moe.num_experts == 160 and cfg.moe.top_k == 6
+        assert cfg.moe.num_shared_experts == 2
+    if arch == "kimi-k2-1t-a32b":
+        assert cfg.moe.num_experts == 384 and cfg.moe.top_k == 8
+    if arch == "qwen3-8b":
+        assert cfg.qk_norm
+    if arch == "qwen2-72b" or arch == "codeqwen1.5-7b":
+        assert cfg.qkv_bias
+
+
+def test_param_counts_in_expected_range():
+    from repro.models.common import param_count
+    for arch, (lo, hi) in {
+        "qwen3-8b": (7e9, 10e9),
+        "llama3-405b": (380e9, 430e9),
+        "qwen2-72b": (65e9, 80e9),
+        "deepseek-v2-236b": (200e9, 260e9),
+        "kimi-k2-1t-a32b": (0.85e12, 1.15e12),
+        "mamba2-2.7b": (2.4e9, 3.1e9),
+    }.items():
+        n = param_count(cfglib.get_config(arch))
+        assert lo < n < hi, (arch, n)

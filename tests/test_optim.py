@@ -1,0 +1,64 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (
+    OptimizerConfig, adamw_init, adamw_update, clip_by_global_norm,
+    compress_grads, global_norm, wsd_schedule,
+)
+
+
+def test_adamw_minimizes_quadratic():
+    cfg = OptimizerConfig(learning_rate=0.1, weight_decay=0.0, warmup_steps=1, total_steps=200)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = adamw_init(params, cfg)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(params, grads, state, cfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.1
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones(4) * 10.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    assert float(norm) == 20.0
+
+
+def test_schedule_phases():
+    cfg = OptimizerConfig(learning_rate=1.0, warmup_steps=10, total_steps=100)
+    assert float(wsd_schedule(cfg, jnp.asarray(5))) == 0.5
+    assert float(wsd_schedule(cfg, jnp.asarray(50))) == 1.0
+    assert float(wsd_schedule(cfg, jnp.asarray(100))) < 0.2
+
+
+def test_grad_compression_roundtrip_close():
+    g = {"w": jnp.linspace(-1, 1, 128)}
+    d = compress_grads(g)
+    assert d["w"].dtype == jnp.bfloat16
+    from repro.optim import decompress_grads
+    back = decompress_grads(d)
+    np.testing.assert_allclose(np.asarray(back["w"]), np.asarray(g["w"]), atol=1e-2)
+
+
+def test_bf16_optimizer_state():
+    cfg = OptimizerConfig(state_dtype=jnp.bfloat16, warmup_steps=1, total_steps=10)
+    params = {"w": jnp.ones(8)}
+    state = adamw_init(params, cfg)
+    assert state["mu"]["w"].dtype == jnp.bfloat16
+    params, state, _ = adamw_update(params, {"w": jnp.ones(8)}, state, cfg)
+    assert state["nu"]["w"].dtype == jnp.bfloat16
+    assert np.isfinite(np.asarray(params["w"])).all()
+
+
+@given(st.integers(1, 4), st.integers(1, 64))
+@settings(max_examples=20, deadline=None)
+def test_update_preserves_shapes_property(ndim, dim):
+    shape = (dim,) * min(ndim, 2)
+    cfg = OptimizerConfig(warmup_steps=1, total_steps=10)
+    params = {"w": jnp.ones(shape)}
+    state = adamw_init(params, cfg)
+    p2, s2, gn = adamw_update(params, {"w": jnp.ones(shape)}, state, cfg)
+    assert p2["w"].shape == shape
+    assert float(gn) >= 0

@@ -1,0 +1,21 @@
+import numpy as np
+
+from repro.core.popularity import PopularityTracker
+
+
+def test_cdf_skewed_reuse():
+    """Fig 7: with Zipf-like reuse, a minority of bytes serves most traffic."""
+    tr = PopularityTracker()
+    stored = {i: 100.0 for i in range(100)}
+    rng = np.random.default_rng(0)
+    for job in range(50):
+        feats = rng.zipf(1.5, 10) % 100
+        tr.record_job({int(f): 100.0 for f in feats})
+    frac = tr.bytes_fraction_for_traffic(stored, 0.8)
+    assert frac < 0.45
+
+
+def test_feature_order_by_bytes():
+    tr = PopularityTracker()
+    tr.record_job({1: 10.0, 2: 1000.0, 3: 1.0})
+    assert tr.feature_order() == [2, 1, 3]

@@ -1,0 +1,79 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dwrf
+from repro.core.datagen import DataGenConfig
+from repro.core.reader import COALESCE_WINDOW, TableReader, plan_reads
+from repro.core.schema import make_schema
+from repro.core.warehouse import Warehouse
+
+
+@pytest.fixture(scope="module")
+def table():
+    s = make_schema("rt", 80, 15, seed=1)
+    wh = Warehouse()
+    t = wh.create_table(s)
+    t.generate(2, DataGenConfig(rows_per_partition=1024, seed=2),
+               dwrf.DwrfWriterOptions(flattened=True, stripe_rows=256))
+    return t
+
+
+def test_selective_read_decodes_only_projection(table):
+    proj = table.schema.logged_ids[:9]
+    r = TableReader(table, proj)
+    res = r.read_partition(table.partitions[0])
+    got = set(res.batch.dense) | set(res.batch.sparse)
+    assert got == set(proj) & set(table.schema.logged_ids)
+    assert res.batch.labels is not None
+    assert res.bytes_used <= res.bytes_read
+
+
+def test_coalescing_reduces_io_count_and_bounds_window(table):
+    proj = table.schema.logged_ids[::7]
+    meta = table.partitions[0]
+    plan_nc = plan_reads(meta.footer, proj, coalesce_window=0)
+    plan_c = plan_reads(meta.footer, proj, coalesce_window=COALESCE_WINDOW)
+    assert len(plan_c.extents) <= len(plan_nc.extents)
+    assert all(l <= COALESCE_WINDOW for _, l in plan_c.extents)
+    assert plan_c.bytes_planned >= plan_c.bytes_wanted
+    # same set of wanted streams either way
+    assert plan_c.bytes_wanted == plan_nc.bytes_wanted
+
+
+def test_extents_sorted_disjoint(table):
+    proj = table.schema.logged_ids[::5]
+    plan = plan_reads(table.partitions[0].footer, proj, coalesce_window=COALESCE_WINDOW)
+    prev_end = -1
+    for off, ln in plan.extents:
+        assert off >= prev_end
+        prev_end = off + ln
+
+
+def test_feature_reordering_reduces_over_read(table):
+    proj = sorted(np.random.default_rng(3).choice(
+        table.schema.logged_ids, size=10, replace=False).tolist())
+    # record popularity from a few jobs so the writer reorders
+    for _ in range(3):
+        r = TableReader(table, proj)
+        r.read_partition(table.partitions[0])
+        r.finish_job()
+    from repro.core.datagen import generate_partition
+    meta_new = table.write_partition(
+        50, generate_partition(table.schema, 50, DataGenConfig(rows_per_partition=1024, seed=9)),
+        dwrf.DwrfWriterOptions(flattened=True, stripe_rows=256),
+    )
+    window = 64 * 1024
+    plan_old = plan_reads(table.partitions[0].footer, proj, window)
+    plan_new = plan_reads(meta_new.footer, proj, window)
+    assert plan_new.over_read_ratio <= plan_old.over_read_ratio + 1e-9
+
+
+def test_io_stats_recorded(table):
+    table.fs.reset_stats()
+    r = TableReader(table, table.schema.logged_ids[:5])
+    r.read_partition(table.partitions[1])
+    st_ = table.fs.stats
+    assert st_.num_ios > 0 and st_.bytes_read > 0
+    pct = st_.percentiles()
+    assert pct["p50"] > 0

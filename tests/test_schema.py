@@ -1,0 +1,75 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.schema import (
+    ColumnBatch, FeatureStatus, SparseColumn, concat_batches, make_schema,
+)
+from repro.core.datagen import DataGenConfig, generate_partition
+
+
+def test_make_schema_counts():
+    s = make_schema("t", 100, 20, seed=0)
+    assert len(s.dense_ids) == 100
+    assert len(s.sparse_ids) == 20
+    assert len(s.logged_ids) == 120
+
+
+def test_feature_lifecycle_evolution():
+    s = make_schema("t", 50, 10, seed=0)
+    rng = np.random.default_rng(1)
+    before = len(s.features)
+    s.evolve(rng, n_new=30)
+    counts = s.status_counts()
+    assert len(s.features) == before + 30
+    assert counts.get("experimental", 0) > 0
+
+
+def test_generate_partition_coverage_and_labels():
+    s = make_schema("t", 30, 8, seed=2)
+    b = generate_partition(s, 0, DataGenConfig(rows_per_partition=512, seed=3))
+    assert b.num_rows == 512
+    assert b.labels is not None and b.labels.shape == (512,)
+    # coverage: NaN fraction roughly matches 1-coverage for a dense feature
+    fid = s.dense_ids[0]
+    cov = s.feature(fid).coverage
+    observed = 1.0 - np.isnan(b.dense[fid]).mean()
+    assert abs(observed - cov) < 0.15
+
+
+def test_slice_concat_roundtrip():
+    s = make_schema("t", 10, 4, seed=4)
+    b = generate_partition(s, 0, DataGenConfig(rows_per_partition=256, seed=5))
+    parts = [b.slice_rows(0, 100), b.slice_rows(100, 256)]
+    merged = concat_batches(parts)
+    assert merged.num_rows == 256
+    for fid in b.dense:
+        np.testing.assert_array_equal(
+            np.nan_to_num(merged.dense[fid]), np.nan_to_num(b.dense[fid])
+        )
+    for fid in b.sparse:
+        np.testing.assert_array_equal(merged.sparse[fid].values, b.sparse[fid].values)
+        np.testing.assert_array_equal(merged.sparse[fid].offsets, b.sparse[fid].offsets)
+
+
+@given(
+    lengths=st.lists(st.integers(0, 6), min_size=1, max_size=20),
+    start_frac=st.floats(0, 1), width_frac=st.floats(0, 1),
+)
+@settings(max_examples=50, deadline=None)
+def test_sparse_column_slice_property(lengths, start_frac, width_frac):
+    n = len(lengths)
+    off = np.zeros(n + 1, np.int64)
+    np.cumsum(lengths, out=off[1:])
+    vals = np.arange(off[-1], dtype=np.int64)
+    col = SparseColumn(offsets=off, values=vals)
+    batch = ColumnBatch(num_rows=n, dense={}, sparse={0: col})
+    start = int(start_frac * n)
+    stop = min(n, start + max(1, int(width_frac * n)))
+    if start >= stop:
+        return
+    sub = batch.slice_rows(start, stop)
+    sc = sub.sparse[0]
+    assert sc.rows == stop - start
+    for i in range(sc.rows):
+        np.testing.assert_array_equal(sc.row(i), col.row(start + i))

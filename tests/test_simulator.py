@@ -1,0 +1,56 @@
+import pytest
+
+from repro.core.dpp.simulator import (
+    C_V1, C_V2, C_SOTA, RM1, RM2, RM3, WORKLOADS,
+    colocated_preprocessing_stall, dsi_power_split,
+    trainer_loading_utilization, worker_throughput, workers_per_trainer,
+)
+
+# Paper Table 9 targets
+TABLE9 = {
+    "RM1": dict(kqps=11.6, rx=0.8, trx=1.37, tx=0.68, wpt=24.2),
+    "RM2": dict(kqps=8.0, rx=1.2, trx=0.96, tx=0.50, wpt=9.4),
+    "RM3": dict(kqps=36.9, rx=0.8, trx=1.01, tx=0.22, wpt=55.2),
+}
+
+
+@pytest.mark.parametrize("name", list(TABLE9))
+def test_table9_reproduction(name):
+    w = WORKLOADS[name]
+    t = worker_throughput(w, C_V1)
+    ref = TABLE9[name]
+    assert abs(t.kqps - ref["kqps"]) / ref["kqps"] < 0.08
+    assert abs(t.storage_rx_gbps - ref["rx"]) / ref["rx"] < 0.08
+    assert abs(t.transform_rx_gbps - ref["trx"]) / ref["trx"] < 0.08
+    assert abs(t.tx_gbps - ref["tx"]) / ref["tx"] < 0.08
+    assert abs(workers_per_trainer(w, C_V1) - ref["wpt"]) / ref["wpt"] < 0.12
+
+
+def test_bottleneck_identities():
+    # §6.3: RM1 cpu(+memBW), RM2 NIC on C-v1, RM3 memory capacity
+    assert worker_throughput(RM1, C_V1).bound == "cpu"
+    assert worker_throughput(RM1, C_V1).utilization["mem_bw"] > 0.85
+    assert worker_throughput(RM2, C_V1).bound == "nic"
+    assert worker_throughput(RM3, C_V1).bound == "mem_capacity"
+    # §6.3: on C-v2 RM2 shifts to memory bandwidth
+    assert worker_throughput(RM2, C_V2).bound == "mem_bw"
+
+
+def test_table7_colocated_stall():
+    r = colocated_preprocessing_stall(RM1)
+    assert 0.45 < r["gpu_stall_frac"] < 0.7      # paper: 56%
+    assert r["cpu_util"] > 0.85                   # paper: 92%
+
+
+def test_fig8_loading_scaling_monotone():
+    u1 = trainer_loading_utilization(5.0)
+    u2 = trainer_loading_utilization(16.5)
+    assert all(u2[k] > u1[k] for k in u1)
+    assert u2["cpu"] < 1.0 and u2["nic"] < 1.0
+
+
+def test_fig1_dsi_power_can_exceed_training():
+    p1 = dsi_power_split(RM1, 16)
+    assert p1["preprocessing_frac"] + p1["storage_frac"] > 0.5
+    p2 = dsi_power_split(RM2, 16)
+    assert p2["training_frac"] > p1["training_frac"]   # diverse across models

@@ -1,0 +1,91 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ssm as S
+from repro import configs as cfglib
+from repro.models import build_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _naive_ssd(x, dt, A, B_, C_):
+    """Sequential reference recurrence: h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t."""
+    b, s, h, p = x.shape
+    g, n = B_.shape[2], B_.shape[3]
+    hg = h // g
+    state = np.zeros((b, h, p, n), np.float64)
+    ys = np.zeros((b, s, h, p), np.float64)
+    x = np.asarray(x, np.float64); dt = np.asarray(dt, np.float64)
+    A = np.asarray(A, np.float64); B_ = np.asarray(B_, np.float64); C_ = np.asarray(C_, np.float64)
+    for t in range(s):
+        da = np.exp(dt[:, t] * A)                      # (b,h)
+        Bh = np.repeat(B_[:, t], hg, axis=1)           # (b,h,n)
+        Ch = np.repeat(C_[:, t], hg, axis=1)
+        state = state * da[:, :, None, None] + np.einsum(
+            "bhn,bhp,bh->bhpn", Bh, x[:, t], dt[:, t]
+        )
+        ys[:, t] = np.einsum("bhpn,bhn->bhp", state, Ch)
+    return ys, state
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 32])
+def test_ssd_chunked_matches_sequential(chunk):
+    b, s, h, p, g, n = 2, 32, 4, 8, 1, 16
+    x = jax.random.normal(KEY, (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (b, s, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (h,)) * 0.3)
+    B_ = jax.random.normal(jax.random.PRNGKey(3), (b, s, g, n)) * 0.5
+    C_ = jax.random.normal(jax.random.PRNGKey(4), (b, s, g, n)) * 0.5
+    y, st = S.ssd_chunked(x, dt, A, B_, C_, chunk=chunk)
+    y_ref, st_ref = _naive_ssd(x, dt, A, B_, C_)
+    np.testing.assert_allclose(np.asarray(y, np.float64), y_ref, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(st, np.float64), st_ref, atol=1e-3)
+
+
+def test_decode_continues_prefill_state():
+    """Running prefill then one decode step == prefill over s+1 tokens."""
+    cfg = cfglib.get_smoke_config("mamba2-2.7b")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    b, s = 2, 17
+    toks = jax.random.randint(jax.random.PRNGKey(5), (b, s), 0, cfg.vocab_size)
+    lp_full, _ = model.prefill(params, {"tokens": toks})
+    _, cache = model.prefill(params, {"tokens": toks[:, :-1]})
+    ld, _ = model.decode_step(
+        params, {"token": toks[:, -1:], "pos": jnp.asarray(s - 1, jnp.int32), "cache": cache}
+    )
+    np.testing.assert_allclose(
+        np.asarray(ld[:, 0], np.float32), np.asarray(lp_full[:, 0], np.float32),
+        atol=0.08, rtol=0.05,
+    )
+
+
+def test_jamba_decode_continues_prefill():
+    # f32: bf16 accumulation drift through 8 heterogeneous sublayers
+    # obscures the equivalence this test checks (verified 8.6e-6 in f32)
+    import dataclasses
+    cfg = dataclasses.replace(
+        cfglib.get_smoke_config("jamba-1.5-large-398b"),
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+    )
+    model = build_model(cfg)
+    params = model.init(KEY)
+    b, s = 1, 9
+    toks = jax.random.randint(jax.random.PRNGKey(6), (b, s), 0, cfg.vocab_size)
+    lp_full, _ = model.prefill(params, {"tokens": toks})
+    _, cache = model.prefill(params, {"tokens": toks[:, :-1]})
+    # pad attention KV cache seq dim to hold the new token
+    def pad_kv(v, name):
+        if name in ("k", "v"):
+            return jnp.pad(v, ((0, 0), (0, 0), (0, 1), (0, 0), (0, 0)))
+        return v
+    cache = {k: pad_kv(v, k) for k, v in cache.items()}
+    ld, _ = model.decode_step(
+        params, {"token": toks[:, -1:], "pos": jnp.asarray(s - 1, jnp.int32), "cache": cache}
+    )
+    np.testing.assert_allclose(
+        np.asarray(ld[:, 0], np.float32), np.asarray(lp_full[:, 0], np.float32),
+        atol=0.08, rtol=0.05,
+    )

@@ -1,0 +1,49 @@
+import numpy as np
+import pytest
+
+from repro.core.tectonic import BLOCK_BYTES, HDD, SSD, IOStats, TectonicFS
+
+
+def test_create_read_roundtrip():
+    fs = TectonicFS(num_nodes=6)
+    data = bytes(np.random.default_rng(0).integers(0, 256, 100_000, np.uint8))
+    fs.create("a/b", data)
+    assert fs.read_all("a/b") == data
+    chunks = fs.read_extents("a/b", [(10, 100), (50_000, 5_000)])
+    assert chunks[0] == data[10:110]
+    assert chunks[1] == data[50_000:55_000]
+
+
+def test_append_only_guard():
+    fs = TectonicFS()
+    fs.create("x", b"123")
+    with pytest.raises(AssertionError):
+        fs.create("x", b"456")
+    fs.append("x", b"456")
+    assert fs.read_all("x") == b"123456"
+
+
+def test_io_cost_model_seek_dominates_small_ios():
+    fs = TectonicFS(media=HDD)
+    fs.create("f", b"0" * (4 * BLOCK_BYTES))
+    fs.read_extents("f", [(i * 1000, 20_000) for i in range(50)])   # ~20KB I/Os
+    small = fs.stats.effective_throughput_MBps
+    fs.reset_stats()
+    fs.read_extents("f", [(0, 8 * 1024 * 1024)])
+    big = fs.stats.effective_throughput_MBps
+    assert big > 3 * small            # HDD seek cliff (Table 12's 97% drop)
+
+
+def test_ssd_iops_per_watt_ratio():
+    # paper §7.2: SSD ~326% IOPS/W, ~9% capacity/W vs HDD
+    hdd_iops_w = HDD.max_iops / HDD.power_W
+    ssd_iops_w = SSD.max_iops / SSD.power_W
+    assert 2.5 < (ssd_iops_w / hdd_iops_w) / 100 or ssd_iops_w / hdd_iops_w > 3
+    cap_ratio = (SSD.capacity_TB / SSD.power_W) / (HDD.capacity_TB / HDD.power_W)
+    assert cap_ratio < 0.15
+
+
+def test_replication_and_usage():
+    fs = TectonicFS(num_nodes=5)
+    fs.create("f", b"z" * 1000)
+    assert sum(n.used_bytes for n in fs.nodes) == 3 * 1000

@@ -1,0 +1,56 @@
+import numpy as np
+import pytest
+
+from repro import configs as cfglib
+from repro.optim import OptimizerConfig
+from repro.train import Trainer, TrainerConfig
+
+
+def _batches(cfg, n, bs=32, seed=0):
+    rng = np.random.default_rng(seed)
+    for _ in range(n):
+        yield {
+            "dense": rng.normal(0, 1, (bs, cfg.num_dense)).astype(np.float32),
+            "sparse_ids": rng.integers(0, cfg.vocab_per_table,
+                                       (bs, cfg.num_tables, cfg.max_ids_per_feature)).astype(np.int32),
+            "sparse_mask": np.ones((bs, cfg.num_tables, cfg.max_ids_per_feature), np.float32),
+            "label": rng.integers(0, 2, bs).astype(np.float32),
+        }
+
+
+def test_fit_decreases_loss(tmp_path):
+    cfg = cfglib.get_smoke_config("dlrm-paper")
+    tr = Trainer(cfg, OptimizerConfig(learning_rate=1e-2, warmup_steps=2, total_steps=40),
+                 TrainerConfig(max_steps=40, checkpoint_dir=str(tmp_path)))
+    state = tr.fit(_batches(cfg, 40))
+    losses = [m.loss for m in tr.history]
+    assert losses[-1] < losses[0]
+    assert state["step"] == 40
+
+
+def test_resume_from_checkpoint(tmp_path):
+    cfg = cfglib.get_smoke_config("dlrm-paper")
+    opt = OptimizerConfig(learning_rate=1e-2, warmup_steps=2, total_steps=40)
+    tr1 = Trainer(cfg, opt, TrainerConfig(max_steps=20, checkpoint_dir=str(tmp_path),
+                                          checkpoint_every=10))
+    tr1.fit(_batches(cfg, 20))
+    tr2 = Trainer(cfg, opt, TrainerConfig(max_steps=30, checkpoint_dir=str(tmp_path),
+                                          checkpoint_every=10))
+    state = tr2.fit(_batches(cfg, 30, seed=1))
+    assert tr2.history[0].step == 21        # resumed, not restarted
+    assert state["step"] == 30
+
+
+def test_stall_accounting():
+    cfg = cfglib.get_smoke_config("dlrm-paper")
+    tr = Trainer(cfg, OptimizerConfig(warmup_steps=1, total_steps=5),
+                 TrainerConfig(max_steps=5))
+    import time
+
+    def slow():
+        for b in _batches(cfg, 5):
+            time.sleep(0.05)
+            yield b
+
+    tr.fit(slow())
+    assert tr.stall_fraction() > 0.05

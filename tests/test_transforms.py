@@ -1,0 +1,155 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.schema import SparseColumn
+from repro.core import transforms as T
+
+
+def _col(lists, scores=None):
+    lengths = [len(l) for l in lists]
+    off = np.zeros(len(lists) + 1, np.int64)
+    np.cumsum(lengths, out=off[1:])
+    vals = np.concatenate([np.asarray(l, np.int64) for l in lists]) if lists else np.zeros(0, np.int64)
+    sc = np.concatenate([np.asarray(s, np.float32) for s in scores]) if scores else None
+    return SparseColumn(offsets=off, values=vals, scores=sc)
+
+
+def test_sigrid_hash_range_and_determinism():
+    c = _col([[1, 2, 3], [4], []])
+    h1 = T.sigrid_hash(c, salt=7, max_value=100)
+    h2 = T.sigrid_hash(c, salt=7, max_value=100)
+    np.testing.assert_array_equal(h1.values, h2.values)
+    assert (h1.values >= 0).all() and (h1.values < 100).all()
+    h3 = T.sigrid_hash(c, salt=8, max_value=100)
+    assert not np.array_equal(h1.values, h3.values)
+
+
+def test_firstx():
+    c = _col([[1, 2, 3, 4], [5], [6, 7]])
+    out = T.firstx(c, 2)
+    assert out.row(0).tolist() == [1, 2]
+    assert out.row(1).tolist() == [5]
+    assert out.row(2).tolist() == [6, 7]
+
+
+def test_positive_modulus_negative_ids():
+    c = _col([[-7, 7, -1]])
+    out = T.positive_modulus(c, 5)
+    assert out.values.tolist() == [3, 2, 4]
+
+
+def test_map_id_with_default():
+    c = _col([[1, 2, 99]])
+    out = T.map_id(c, {1: 10, 2: 20}, default=-1)
+    assert out.values.tolist() == [10, 20, -1]
+
+
+def test_enumerate_ids():
+    c = _col([[9, 9, 9], [5]])
+    out = T.enumerate_ids(c)
+    assert out.values.tolist() == [0, 1, 2, 0]
+
+
+def test_compute_score():
+    c = _col([[1, 2]], scores=[[1.0, 2.0]])
+    out = T.compute_score(c, scale=2.0, bias=1.0)
+    np.testing.assert_allclose(out.scores, [3.0, 5.0])
+
+
+def test_id_list_intersection():
+    a = _col([[1, 2, 3], [4, 5]])
+    b = _col([[2, 3, 9], [6]])
+    out = T.id_list_intersection(a, b)
+    assert out.row(0).tolist() == [2, 3]
+    assert out.row(1).tolist() == []
+
+
+def test_cartesian_lengths():
+    a = _col([[1, 2], [3]])
+    b = _col([[10, 20, 30], []])
+    out = T.cartesian(a, b)
+    assert np.diff(out.offsets).tolist() == [6, 0]
+
+
+def test_ngram_counts():
+    c = _col([[1, 2, 3, 4], [7], [5, 6]])
+    out = T.ngram(c, n=2)
+    assert np.diff(out.offsets).tolist() == [3, 0, 1]
+    # bigram hash depends on both members
+    c2 = _col([[1, 2, 3, 5], [7], [5, 6]])
+    out2 = T.ngram(c2, n=2)
+    assert out.values[2] != out2.values[2]
+
+
+def test_bucketize_and_onehot_and_dense_norms():
+    vals = np.array([-5.0, 0.0, 5.0], np.float32)
+    borders = np.array([-1.0, 1.0])
+    b = T.bucketize(vals, borders)
+    assert b.values.tolist() == [0, 1, 2]
+    oh = T.onehot(vals, borders)
+    assert oh.shape == (3, 3) and (oh.sum(1) == 1).all()
+    assert np.isfinite(T.boxcox(vals)).all()
+    assert np.isfinite(T.logit(np.array([0.2, 0.8], np.float32))).all()
+    np.testing.assert_allclose(T.clamp(vals, -1, 1), [-1, 0, 1])
+    hrs = T.get_local_hour(np.array([3600.0 * 30], np.float32))
+    assert hrs[0] == 6.0
+
+
+def test_sampling_reduces_rows():
+    from repro.core.datagen import DataGenConfig, generate_partition
+    from repro.core.schema import make_schema
+    s = make_schema("t", 5, 3, seed=0)
+    b = generate_partition(s, 0, DataGenConfig(rows_per_partition=400, seed=1))
+    out = T.sampling(b, 0.5, seed=2)
+    assert 100 < out.num_rows < 300
+    assert out.labels.shape == (out.num_rows,)
+    for fid, c in out.sparse.items():
+        assert c.rows == out.num_rows
+        assert len(c.values) == c.offsets[-1]
+
+
+def test_pipeline_dag_and_histogram():
+    pipe = T.default_dlrm_pipeline([0, 1], [10, 11], hash_size=50, n_derived=3)
+    hist = pipe.op_class_histogram()
+    assert hist["feature_gen"] == 3
+    assert set(pipe.required_features()) == {0, 1, 10, 11}
+
+
+def test_materialize_shapes():
+    pipe = T.default_dlrm_pipeline([0], [10], hash_size=50)
+    from repro.core.schema import ColumnBatch
+    batch = ColumnBatch(
+        num_rows=4,
+        dense={0: np.array([1.0, np.nan, 3.0, 4.0], np.float32)},
+        sparse={10: _col([[1, 2], [3], [], [4, 5, 6]])},
+    )
+    env = pipe(batch)
+    out = T.materialize_dlrm_batch(env, ["d0"], ["s10"], max_ids=2)
+    assert out["dense"].shape == (4, 1)
+    assert out["sparse_ids"].shape == (4, 1, 2)
+    assert out["sparse_mask"][0, 0].tolist() == [1.0, 1.0]
+    assert out["sparse_mask"][2, 0].tolist() == [0.0, 0.0]
+    assert out["sparse_mask"][3, 0].tolist() == [1.0, 1.0]   # truncated to 2
+
+
+@given(st.lists(st.lists(st.integers(-10**9, 10**9), max_size=8), min_size=1, max_size=12),
+       st.integers(1, 6))
+@settings(max_examples=50, deadline=None)
+def test_firstx_property(lists, x):
+    c = _col(lists)
+    out = T.firstx(c, x)
+    lens = np.diff(out.offsets)
+    assert (lens <= x).all()
+    for i, l in enumerate(lists):
+        np.testing.assert_array_equal(out.row(i), np.asarray(l[:x], np.int64))
+
+
+@given(st.lists(st.lists(st.integers(0, 10**9), max_size=6), min_size=1, max_size=10),
+       st.integers(2, 10**6))
+@settings(max_examples=50, deadline=None)
+def test_hash_range_property(lists, m):
+    c = _col(lists)
+    out = T.sigrid_hash(c, salt=1, max_value=m)
+    assert (out.values >= 0).all() and (out.values < m).all()
+    np.testing.assert_array_equal(out.offsets, c.offsets)
