@@ -59,5 +59,6 @@ def run() -> None:
     emit(
         "table9.measured_local_worker", wall / max(rows, 1) * 1e6,
         f"kQPS={rows/wall/1e3:.2f} storage_rx={m.storage_rx_bytes} tx={m.tx_bytes} "
+        f"stripes_read={m.stripes_read} over_read={m.over_read_ratio:.3f} "
         f"breakdown=" + "/".join(f"{k}:{v:.2f}" for k, v in m.cycle_breakdown().items()),
     )

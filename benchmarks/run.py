@@ -12,6 +12,7 @@ import traceback
 
 SECTIONS = [
     "storage",          # Tables 3/4/5/6
+    "reader",           # split-scoped streaming reads (ISSUE 1)
     "popularity",       # Fig 7
     "dpp",              # Table 9 / Fig 9 / Table 10
     "trainer",          # Table 8 / Fig 8 / Table 7

@@ -95,6 +95,7 @@ class DPPMaster:
         partition_rows: Dict[int, int],
         lease_s: float = 30.0,
         autoscaler: Optional[AutoScaler] = None,
+        partition_stripe_rows: Optional[Dict[int, int]] = None,
     ):
         self.spec = spec
         self.lease_s = lease_s
@@ -106,14 +107,22 @@ class DPPMaster:
         self._done: set = set()
         self._workers: Dict[str, float] = {}      # worker_id -> last heartbeat
         self._restarts: List[str] = []
+        self._stripe_rows = dict(partition_stripe_rows or {})
         self._build_splits(partition_rows)
 
     def _build_splits(self, partition_rows: Dict[int, int]) -> None:
+        """Emit stripe-aligned splits: rows_per_split is rounded up to a
+        multiple of the partition's stripe size so a split's row range maps
+        onto whole stripes and a worker never decodes rows it throws away."""
         sid = 0
         for p in self.spec.partitions:
             rows = partition_rows[p]
-            for start in range(0, rows, self.spec.rows_per_split):
-                end = min(start + self.spec.rows_per_split, rows)
+            step = self.spec.rows_per_split
+            stripe = self._stripe_rows.get(p, 0)
+            if stripe > 0:
+                step = max(1, -(-step // stripe)) * stripe
+            for start in range(0, rows, step):
+                end = min(start + step, rows)
                 self._splits[sid] = Split(sid, p, start, end)
                 self._pending.append(sid)
                 sid += 1
@@ -185,6 +194,7 @@ class DPPMaster:
                 "spec": self.spec,
                 "done": sorted(self._done),
                 "n_splits": len(self._splits),
+                "stripe_rows": dict(self._stripe_rows),
             }
 
     @classmethod
@@ -194,7 +204,10 @@ class DPPMaster:
         partition_rows: Dict[int, int],
         lease_s: float = 30.0,
     ) -> "DPPMaster":
-        m = cls(ckpt["spec"], partition_rows, lease_s=lease_s)
+        m = cls(
+            ckpt["spec"], partition_rows, lease_s=lease_s,
+            partition_stripe_rows=ckpt.get("stripe_rows"),
+        )
         with m._lock:
             for sid in ckpt["done"]:
                 m._done.add(sid)

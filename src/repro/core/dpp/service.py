@@ -36,9 +36,17 @@ class DPPSession:
         self.spec = spec
         self.table = table
         partition_rows = {p: table.partitions[p].num_rows for p in spec.partitions}
+        # stripe-aligned splits: the writer emits uniform stripes, so the
+        # first stripe's row count is the partition's stripe size
+        partition_stripe_rows = {
+            p: (table.partitions[p].footer.stripes[0].num_rows
+                if table.partitions[p].footer.stripes else 0)
+            for p in spec.partitions
+        }
         self.master = DPPMaster(
             spec, partition_rows, lease_s=lease_s,
             autoscaler=AutoScaler(max_workers=max_workers),
+            partition_stripe_rows=partition_stripe_rows,
         )
         self.tensor_cache = tensor_cache
         self.workers: List[DPPWorker] = []

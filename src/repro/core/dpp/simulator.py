@@ -142,6 +142,37 @@ def workers_per_trainer(w: ModelWorkload, node: NodeSpec) -> float:
     return w.trainer_gbps / max(wt.tx_gbps, 1e-9)
 
 
+def split_over_read_amplification(
+    partition_rows: int,
+    rows_per_split: int,
+    stripe_rows: int,
+    split_scoped: bool = True,
+    stripe_aligned: bool = True,
+) -> float:
+    """Rows decoded per row served across one partition's splits.
+
+    ``split_scoped=False`` models a read path where every split re-reads
+    and decodes the whole partition: amplification equals the number of
+    splits per partition, so adding workers multiplies wasted bytes.
+    Split-scoped reads only pay stripe-edge trim waste, and stripe-aligned
+    splits eliminate even that (amplification 1.0).
+    """
+    partition_rows = max(1, partition_rows)
+    n_splits = -(-partition_rows // max(1, rows_per_split))
+    if not split_scoped:
+        return float(n_splits)
+    if stripe_aligned or stripe_rows <= 0:
+        return 1.0
+    decoded = 0
+    for s in range(n_splits):
+        lo = s * rows_per_split
+        hi = min(partition_rows, lo + rows_per_split)
+        first = (lo // stripe_rows) * stripe_rows
+        last = min(partition_rows, -(-hi // stripe_rows) * stripe_rows)
+        decoded += last - first
+    return decoded / partition_rows
+
+
 # ---------------------------------------------------------------------------
 # Trainer frontend model (Fig. 8, Table 7)
 # ---------------------------------------------------------------------------

@@ -5,8 +5,16 @@ chunks, filter unused features), **transform** (per-feature DAG via
 high-performance vectorized kernels), and partially **load** (batch into
 ready-to-serve tensors kept in a bounded in-memory buffer).
 
+Splits are processed as a two-stage producer/consumer pipeline: a
+producer thread streams one stripe at a time from storage
+(``TableReader.iter_stripes``) into a small prefetch buffer while the
+consumer overlaps transform + load on the previous stripe.  A split only
+reads the stripes covering its own row range — never the whole partition.
+
 Workers account bytes and CPU-time per ETL phase — the measurements behind
-Table 9 ("Storage RX / Transform RX / TX") and Fig. 9's cycle breakdown.
+Table 9 ("Storage RX / Transform RX / TX") and Fig. 9's cycle breakdown —
+plus per-stripe accounting (stripes read, rows decoded vs. rows served)
+that makes read over-scoping measurable.
 """
 from __future__ import annotations
 
@@ -14,7 +22,7 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -33,7 +41,10 @@ class WorkerMetrics:
     transform_s: float = 0.0
     load_s: float = 0.0
     splits_done: int = 0
-    rows_done: int = 0
+    rows_done: int = 0                 # rows served to clients
+    stripes_read: int = 0              # stripes fetched + decoded
+    rows_decoded: int = 0              # stripe rows decoded (incl. trim waste)
+    rows_from_cache: int = 0           # rows served by tensor-cache hits
 
     def merge(self, o: "WorkerMetrics") -> None:
         for f in dataclasses.fields(self):
@@ -42,6 +53,15 @@ class WorkerMetrics:
     @property
     def busy_s(self) -> float:
         return self.extract_s + self.transform_s + self.load_s
+
+    @property
+    def over_read_ratio(self) -> float:
+        """Rows decoded per storage-served row (cache hits excluded);
+        1.0 = perfectly split-scoped reads."""
+        storage_rows = self.rows_done - self.rows_from_cache
+        if storage_rows <= 0:
+            return 1.0      # nothing read from storage: nothing over-read
+        return self.rows_decoded / storage_rows
 
     def cycle_breakdown(self) -> Dict[str, float]:
         t = max(self.busy_s, 1e-9)
@@ -63,6 +83,7 @@ class DPPWorker:
         buffer_size: int = 8,
         fail_after_splits: Optional[int] = None,   # fault-injection hook
         tensor_cache=None,                         # shared TensorCache (§7.5)
+        prefetch_stripes: int = 2,                 # extract-ahead depth
     ):
         self.worker_id = worker_id
         self.master = master
@@ -73,6 +94,7 @@ class DPPWorker:
         self.metrics = WorkerMetrics()
         self.fail_after_splits = fail_after_splits
         self.tensor_cache = tensor_cache
+        self.prefetch_stripes = max(1, prefetch_stripes)
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self.alive = True
@@ -127,7 +149,14 @@ class DPPWorker:
     # -- ETL -------------------------------------------------------------------
 
     def process_split(self, reader: TableReader, split: Split):
-        """Extract + transform + batch one split; yields tensor minibatches."""
+        """Extract + transform + batch one split; returns tensor minibatches.
+
+        Two-stage pipeline: a producer thread streams the split's stripes
+        from storage into a bounded prefetch queue; this (consumer) thread
+        overlaps transform + load on already-extracted stripes.  Batch
+        boundaries are identical to a monolithic read: full ``batch_size``
+        chunks over the split's rows, one partial batch at the end.
+        """
         meta = self.table.partitions[split.partition]
 
         if self.tensor_cache is not None:
@@ -138,44 +167,120 @@ class DPPWorker:
             if cached is not None:
                 self.metrics.splits_done += 1
                 self.metrics.rows_done += split.row_end - split.row_start
+                self.metrics.rows_from_cache += split.row_end - split.row_start
                 return cached
 
-        t0 = time.perf_counter()
-        result = reader.read_partition(meta, row_limit=None)
-        cols = result.batch.slice_rows(split.row_start, split.row_end)
-        t1 = time.perf_counter()
+        t_split0 = time.perf_counter()
+        prefetch: "queue.Queue" = queue.Queue(self.prefetch_stripes)
+        abort = threading.Event()   # consumer died: let the producer exit
 
-        env = self.pipeline(cols)
-        t2 = time.perf_counter()
+        def _put(item) -> bool:
+            while not abort.is_set():
+                try:
+                    prefetch.put(item, timeout=0.1)
+                    return True
+                except queue.Full:
+                    continue
+            return False
 
+        def _produce() -> None:
+            try:
+                t0 = time.perf_counter()
+                for sr in reader.iter_stripes(meta, split.row_start, split.row_end):
+                    t1 = time.perf_counter()
+                    if not _put((sr, t1 - t0)):
+                        return
+                    t0 = time.perf_counter()
+                _put((_EOS, 0.0))
+            except BaseException as e:  # surface extraction failures
+                _put((e, 0.0))
+
+        producer = threading.Thread(target=_produce, daemon=True)
+        producer.start()
+
+        m = self.metrics
         bs = self.spec.batch_size
-        n = cols.num_rows
-        out = []
-        for start in range(0, n, bs):
-            stop = min(start + bs, n)
+        out: List[Dict[str, np.ndarray]] = []
+        # transformed stripes awaiting batch emission: (env, labels, rows).
+        # Concatenated once per emission, not once per stripe, so carry rows
+        # are not re-copied for every stripe that arrives.
+        pending: List[Tuple[Dict[str, Any], Optional[np.ndarray], int]] = []
+        pending_rows = 0
+        n_served = 0
+
+        def _emit(env, labels, start, stop):
             sub_env = _slice_env(env, start, stop)
             tensors = materialize_dlrm_batch(
                 sub_env,
                 self.spec.dense_keys,
                 self.spec.sparse_keys,
                 self.spec.max_ids_per_feature,
-                labels=cols.labels[start:stop] if cols.labels is not None else None,
+                labels=labels[start:stop] if labels is not None else None,
             )
             out.append(tensors)
-        t3 = time.perf_counter()
+
+        def _drain(final: bool) -> None:
+            nonlocal pending, pending_rows, n_served
+            if pending_rows == 0 or (not final and pending_rows < bs):
+                return
+            env = _concat_envs([p[0] for p in pending])
+            labels = _concat_labels(pending)
+            start = 0
+            while pending_rows - start >= bs:
+                _emit(env, labels, start, start + bs)
+                start += bs
+            if final and start < pending_rows:
+                _emit(env, labels, start, pending_rows)
+                start = pending_rows
+            n_served += start
+            if start < pending_rows:
+                pending = [(
+                    _slice_env(env, start, pending_rows),
+                    labels[start:pending_rows] if labels is not None else None,
+                    pending_rows - start,
+                )]
+            else:
+                pending = []
+            pending_rows -= start
+
+        try:
+            while True:
+                item, extract_dt = prefetch.get()
+                if item is _EOS:
+                    break
+                if isinstance(item, BaseException):
+                    raise item
+                sr = item
+                m.extract_s += extract_dt
+                m.storage_rx_bytes += sr.bytes_read
+                m.stripes_read += 1
+                m.rows_decoded += sr.rows_decoded
+                m.extract_out_bytes += sr.batch.nbytes()
+
+                t2 = time.perf_counter()
+                env = self.pipeline(sr.batch)
+                t3 = time.perf_counter()
+                m.transform_s += t3 - t2
+
+                pending.append((env, sr.batch.labels, sr.batch.num_rows))
+                pending_rows += sr.batch.num_rows
+                _drain(final=False)
+                m.load_s += time.perf_counter() - t3
+        except BaseException:
+            abort.set()   # unblock the producer; it exits without a consumer
+            raise
+
+        producer.join()
+        t4 = time.perf_counter()
+        _drain(final=True)
+        m.load_s += time.perf_counter() - t4
 
         if self.tensor_cache is not None:
-            self.tensor_cache.put(key, out, cpu_s=t3 - t0)
+            self.tensor_cache.put(key, out, cpu_s=time.perf_counter() - t_split0)
 
-        m = self.metrics
-        m.storage_rx_bytes += result.bytes_read
-        m.extract_out_bytes += cols.nbytes()
         m.tx_bytes += sum(sum(a.nbytes for a in b.values()) for b in out)
-        m.extract_s += t1 - t0
-        m.transform_s += t2 - t1
-        m.load_s += t3 - t2
         m.splits_done += 1
-        m.rows_done += n
+        m.rows_done += n_served
         return out
 
     # -- serving to clients ------------------------------------------------------
@@ -189,6 +294,37 @@ class DPPWorker:
     @property
     def buffered(self) -> int:
         return self.buffer.qsize()
+
+
+_EOS = object()   # end-of-stripes sentinel for the prefetch queue
+
+
+def _concat_envs(envs: List[Dict[str, Any]]) -> Dict[str, Any]:
+    """Row-concatenate transform environments (pending stripes, in order)."""
+    from repro.core.schema import SparseColumn, concat_sparse_columns
+
+    if len(envs) == 1:
+        return envs[0]
+    out: Dict[str, Any] = {}
+    for k, v0 in envs[0].items():
+        if isinstance(v0, SparseColumn):
+            out[k] = concat_sparse_columns([e[k] for e in envs])
+        else:
+            out[k] = np.concatenate([e[k] for e in envs], axis=0)
+    return out
+
+
+def _concat_labels(
+    pending: List[Tuple[Dict[str, Any], Optional[np.ndarray], int]]
+) -> Optional[np.ndarray]:
+    if all(labels is None for _, labels, _ in pending):
+        return None
+    if len(pending) == 1:
+        return pending[0][1]
+    return np.concatenate([
+        labels if labels is not None else np.zeros(rows, np.float32)
+        for _, labels, rows in pending
+    ])
 
 
 def _slice_env(env: Dict[str, Any], start: int, stop: int) -> Dict[str, Any]:

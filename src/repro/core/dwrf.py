@@ -13,19 +13,26 @@ Implements the storage-format co-design of §7.5:
   * **large stripes (LS)**: ``stripe_rows`` scales the stripe (and thus the
     contiguous extent of each feature stream).
 
-Streams are zstd-compressed and XOR-"encrypted" (a cheap stand-in that
-still forces a full pass over the bytes — the paper's datacenter tax).
-All sizes are real byte counts; the Tectonic layer stores the file bytes.
+Streams are compressed (pluggable codec, see below) and XOR-"encrypted"
+(a cheap stand-in that still forces a full pass over the bytes — the
+paper's datacenter tax).  All sizes are real byte counts; the Tectonic
+layer stores the file bytes.
+
+Compression is a codec registry rather than a hard dependency: every
+stream carries a 1-byte codec id, ``zstd`` is used when the ``zstandard``
+package is importable, and stdlib ``zlib`` is the always-available
+fallback, so the format (and the test suite) works in environments
+without optional packages installed.
 """
 from __future__ import annotations
 
 import dataclasses
 import io
 import struct
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+import zlib
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
-import zstandard as zstd
 
 from repro.core.schema import ColumnBatch, SparseColumn, TableSchema
 
@@ -41,20 +48,87 @@ def _decrypt(data: bytes) -> bytes:
     return _encrypt(data)
 
 
-def _compress(data: bytes, level: int = 1) -> bytes:
-    return zstd.ZstdCompressor(level=level).compress(data)
+# ---------------------------------------------------------------------------
+# Codec registry
+# ---------------------------------------------------------------------------
 
 
-def _decompress(data: bytes) -> bytes:
-    return zstd.ZstdDecompressor().decompress(data)
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    cid: int                                   # codec id byte in each stream
+    name: str
+    compress: Callable[[bytes, int], bytes]    # (payload, level) -> bytes
+    decompress: Callable[[bytes], bytes]
 
 
-def encode_stream(payload: bytes) -> bytes:
-    return _encrypt(_compress(payload))
+_CODECS: Dict[int, Codec] = {}
+_CODECS_BY_NAME: Dict[str, Codec] = {}
+
+
+def register_codec(codec: Codec) -> None:
+    if codec.cid in _CODECS and _CODECS[codec.cid].name != codec.name:
+        raise ValueError(
+            f"codec id {codec.cid} already registered as "
+            f"{_CODECS[codec.cid].name!r}"
+        )
+    if codec.name in _CODECS_BY_NAME and _CODECS_BY_NAME[codec.name].cid != codec.cid:
+        raise ValueError(
+            f"codec name {codec.name!r} already registered with id "
+            f"{_CODECS_BY_NAME[codec.name].cid}"
+        )
+    _CODECS[codec.cid] = codec
+    _CODECS_BY_NAME[codec.name] = codec
+
+
+register_codec(Codec(cid=0, name="raw",
+                     compress=lambda d, level: d,
+                     decompress=lambda d: d))
+register_codec(Codec(cid=1, name="zlib",
+                     compress=lambda d, level: zlib.compress(d, level),
+                     decompress=zlib.decompress))
+
+try:
+    import zstandard as _zstd
+except ImportError:
+    _zstd = None
+else:
+    register_codec(Codec(
+        cid=2, name="zstd",
+        compress=lambda d, level: _zstd.ZstdCompressor(level=level).compress(d),
+        decompress=lambda d: _zstd.ZstdDecompressor().decompress(d),
+    ))
+
+DEFAULT_CODEC = "zstd" if _zstd is not None else "zlib"
+
+
+def available_codecs() -> List[str]:
+    return sorted(_CODECS_BY_NAME)
+
+
+def get_codec(name: Optional[str] = None) -> Codec:
+    name = name or DEFAULT_CODEC
+    try:
+        return _CODECS_BY_NAME[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown codec {name!r}; available: {available_codecs()}"
+        ) from None
+
+
+def encode_stream(payload: bytes, codec: Optional[str] = None, level: int = 1) -> bytes:
+    c = get_codec(codec)
+    return bytes([c.cid]) + _encrypt(c.compress(payload, level))
 
 
 def decode_stream(data: bytes) -> bytes:
-    return _decompress(_decrypt(data))
+    cid = data[0]
+    codec = _CODECS.get(cid)
+    if codec is None:
+        raise KeyError(
+            f"stream written with unavailable codec id {cid} "
+            f"(available: {available_codecs()})"
+        )
+    return codec.decompress(_decrypt(data[1:]))
 
 
 # ---------------------------------------------------------------------------
@@ -170,6 +244,7 @@ class DwrfWriterOptions:
     stripe_rows: int = 2048              # LS knob
     feature_order: Optional[Sequence[int]] = None   # FR (None = fid order)
     compression_level: int = 1
+    codec: Optional[str] = None          # None = DEFAULT_CODEC (zstd if available)
 
 
 def write_dwrf(batch: ColumnBatch, opts: DwrfWriterOptions) -> DwrfFile:
@@ -193,7 +268,7 @@ def write_dwrf(batch: ColumnBatch, opts: DwrfWriterOptions) -> DwrfFile:
         streams: List[StreamInfo] = []
 
         def emit(fid: int, kind: str, payload: bytes):
-            enc = _encrypt(_compress(payload, opts.compression_level))
+            enc = encode_stream(payload, opts.codec, opts.compression_level)
             streams.append(StreamInfo(fid=fid, kind=kind, offset=buf.tell(), length=len(enc)))
             buf.write(enc)
 

@@ -11,11 +11,17 @@ Implements the read-path co-design ladder of Table 12:
 
 Every read returns both the decoded columns and an I/O accounting record
 (bytes used vs read, I/O size distribution — Tables 5 and 6).
+
+Reads are **split-scoped**: ``plan_reads`` takes an optional row range and
+prunes to the stripes that overlap it, so a DPP split only fetches and
+decodes its own stripes instead of re-reading the whole partition.
+``TableReader.iter_stripes`` streams one stripe at a time for
+producer/consumer pipelines; ``read_rows`` materializes an exact row range.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -33,6 +39,8 @@ class ReadPlan:
     wanted: List[Tuple[int, int, dwrf.StreamInfo]]      # (stripe_idx, fid, stream)
     bytes_wanted: int
     bytes_planned: int
+    stripe_indices: List[int] = dataclasses.field(default_factory=list)
+    stripes_total: int = 0
 
     @property
     def over_read_ratio(self) -> float:
@@ -46,30 +54,54 @@ class ReadResult:
     bytes_used: int
     io_sizes: List[int]
     feature_bytes: Dict[int, int]
+    stripes_read: int = 0
+    stripes_total: int = 0
+    rows_decoded: int = 0
 
 
-def plan_reads(
+@dataclasses.dataclass
+class StripeRead:
+    """One decoded stripe, trimmed to the requested row range."""
+
+    stripe_index: int
+    row_start: int               # absolute rows covered after trimming
+    row_end: int
+    batch: ColumnBatch
+    bytes_read: int
+    bytes_used: int
+    rows_decoded: int            # stripe rows decoded (>= row_end - row_start)
+
+
+def _trim_stripe(
+    part: ColumnBatch, stripe: dwrf.StripeInfo, lo: int, hi: int
+) -> Tuple[ColumnBatch, int, int]:
+    """Drop stripe-edge rows outside [lo, hi); returns the trimmed batch and
+    the kept row range relative to the stripe."""
+    t0 = max(lo - stripe.row_start, 0)
+    t1 = min(hi - stripe.row_start, stripe.num_rows)
+    if t0 > 0 or t1 < stripe.num_rows:
+        part = part.slice_rows(t0, t1)
+    return part, t0, t1
+
+
+def stripes_overlapping(
     footer: dwrf.DwrfFooter,
-    feature_ids: Sequence[int],
-    coalesce_window: int = 0,
-    include_labels: bool = True,
-) -> ReadPlan:
-    """Build the extent list for a feature projection over one file."""
-    want_f = set(feature_ids)
-    wanted: List[Tuple[int, int, dwrf.StreamInfo]] = []
-    for si, stripe in enumerate(footer.stripes):
-        if footer.flattened:
-            for s in stripe.streams:
-                if s.fid in want_f or (include_labels and s.kind == "labels"):
-                    wanted.append((si, s.fid, s))
-        else:
-            # map encoding: must read the monolithic map (+ labels) streams
-            for s in stripe.streams:
-                wanted.append((si, s.fid, s))
+    row_start: Optional[int] = None,
+    row_end: Optional[int] = None,
+) -> List[int]:
+    """Indices of stripes intersecting [row_start, row_end)."""
+    lo = 0 if row_start is None else row_start
+    hi = footer.num_rows if row_end is None else row_end
+    return [
+        si for si, st in enumerate(footer.stripes)
+        if st.row_start < hi and st.row_start + st.num_rows > lo
+    ]
 
-    streams = sorted((s for _, _, s in wanted), key=lambda s: s.offset)
-    bytes_wanted = sum(s.length for s in streams)
 
+def _coalesce_extents(
+    streams: Sequence[dwrf.StreamInfo], coalesce_window: int
+) -> List[Tuple[int, int]]:
+    """Merge offset-sorted stream extents whose span fits the window."""
     extents: List[Tuple[int, int]] = []
     for s in streams:
         if (
@@ -81,10 +113,44 @@ def plan_reads(
             extents[-1] = (off, max(ln, s.offset + s.length - off))
         else:
             extents.append((s.offset, s.length))
+    return extents
+
+
+def plan_reads(
+    footer: dwrf.DwrfFooter,
+    feature_ids: Sequence[int],
+    coalesce_window: int = 0,
+    include_labels: bool = True,
+    row_start: Optional[int] = None,
+    row_end: Optional[int] = None,
+) -> ReadPlan:
+    """Build the extent list for a feature projection over one file.
+
+    With a row range, only the stripes overlapping [row_start, row_end)
+    are planned — the split-scoped read path.
+    """
+    want_f = set(feature_ids)
+    stripe_idx = stripes_overlapping(footer, row_start, row_end)
+    wanted: List[Tuple[int, int, dwrf.StreamInfo]] = []
+    for si in stripe_idx:
+        stripe = footer.stripes[si]
+        if footer.flattened:
+            for s in stripe.streams:
+                if s.fid in want_f or (include_labels and s.kind == "labels"):
+                    wanted.append((si, s.fid, s))
+        else:
+            # map encoding: must read the monolithic map (+ labels) streams
+            for s in stripe.streams:
+                wanted.append((si, s.fid, s))
+
+    streams = sorted((s for _, _, s in wanted), key=lambda s: s.offset)
+    bytes_wanted = sum(s.length for s in streams)
+    extents = _coalesce_extents(streams, coalesce_window)
     bytes_planned = sum(l for _, l in extents)
     return ReadPlan(
         extents=extents, wanted=wanted,
         bytes_wanted=bytes_wanted, bytes_planned=bytes_planned,
+        stripe_indices=stripe_idx, stripes_total=len(footer.stripes),
     )
 
 
@@ -104,16 +170,15 @@ class TableReader:
         self.record_popularity = record_popularity
         self._job_feature_bytes: Dict[int, float] = {}
 
-    def read_partition(
-        self, meta: PartitionMeta, row_limit: Optional[int] = None
-    ) -> ReadResult:
-        footer = meta.footer
-        plan = plan_reads(footer, self.feature_ids, self.coalesce_window)
+    def _fetch_streams(
+        self, meta: PartitionMeta, plan: ReadPlan
+    ) -> Tuple[Dict[int, Dict[Tuple[int, str], bytes]], Dict[int, int]]:
+        """Execute a plan: fetch extents, slice each wanted stream back out
+        of its (possibly merged) extent.  Returns per-stripe raw stream bytes
+        and per-feature byte counts."""
         blobs = self.table.fs.read_extents(meta.path, plan.extents)
-
-        # slice each wanted stream back out of its (possibly merged) extent
-        extent_map: List[Tuple[int, int, bytes]] = [
-            (off, ln, blob) for (off, ln), blob in zip(plan.extents, blobs)
+        extent_map: List[Tuple[int, bytes]] = [
+            (off, blob) for (off, _), blob in zip(plan.extents, blobs)
         ]
         extent_offsets = np.array([e[0] for e in extent_map])
 
@@ -121,36 +186,110 @@ class TableReader:
         feature_bytes: Dict[int, int] = {}
         for si, fid, s in plan.wanted:
             ei = int(np.searchsorted(extent_offsets, s.offset, "right") - 1)
-            off0, _, blob = extent_map[ei]
+            off0, blob = extent_map[ei]
             raw = blob[s.offset - off0: s.offset - off0 + s.length]
             per_stripe.setdefault(si, {})[(s.fid, s.kind)] = raw
             if fid >= 0:
                 feature_bytes[fid] = feature_bytes.get(fid, 0) + s.length
+        return per_stripe, feature_bytes
 
-        from repro.core.schema import concat_batches
-
-        parts = []
-        for si in sorted(per_stripe):
-            stripe = footer.stripes[si]
-            parts.append(
-                dwrf.decode_stripe_features(stripe, per_stripe[si], self.feature_ids)
-            )
-            if row_limit and sum(p.num_rows for p in parts) >= row_limit:
-                break
-        batch = concat_batches(parts)
-        if row_limit:
-            batch = batch.slice_rows(0, min(row_limit, batch.num_rows))
-
+    def _record_feature_bytes(self, feature_bytes: Dict[int, int]) -> None:
         for fid, nb in feature_bytes.items():
             self._job_feature_bytes[fid] = self._job_feature_bytes.get(fid, 0) + nb
 
+    def read_rows(
+        self,
+        meta: PartitionMeta,
+        row_start: Optional[int] = None,
+        row_end: Optional[int] = None,
+    ) -> ReadResult:
+        """Read exactly [row_start, row_end), fetching only overlapping
+        stripes (one coalesced extent batch across those stripes)."""
+        footer = meta.footer
+        lo = 0 if row_start is None else max(0, row_start)
+        hi = footer.num_rows if row_end is None else min(row_end, footer.num_rows)
+        plan = plan_reads(
+            footer, self.feature_ids, self.coalesce_window,
+            row_start=lo, row_end=hi,
+        )
+        per_stripe, feature_bytes = self._fetch_streams(meta, plan)
+
+        from repro.core.schema import concat_batches
+
+        parts: List[ColumnBatch] = []
+        rows_decoded = 0
+        for si in sorted(per_stripe):
+            stripe = footer.stripes[si]
+            part = dwrf.decode_stripe_features(stripe, per_stripe[si], self.feature_ids)
+            rows_decoded += part.num_rows
+            part, _, _ = _trim_stripe(part, stripe, lo, hi)
+            parts.append(part)
+        batch = (
+            concat_batches(parts) if parts
+            else ColumnBatch(num_rows=0, dense={}, sparse={})
+        )
+
+        self._record_feature_bytes(feature_bytes)
         return ReadResult(
             batch=batch,
             bytes_read=plan.bytes_planned,
             bytes_used=plan.bytes_wanted,
             io_sizes=[l for _, l in plan.extents],
             feature_bytes=feature_bytes,
+            stripes_read=len(plan.stripe_indices),
+            stripes_total=plan.stripes_total,
+            rows_decoded=rows_decoded,
         )
+
+    def iter_stripes(
+        self,
+        meta: PartitionMeta,
+        row_start: Optional[int] = None,
+        row_end: Optional[int] = None,
+    ) -> Iterator[StripeRead]:
+        """Stream one stripe at a time: fetch + decode each overlapping
+        stripe's coalesced extents independently instead of materializing
+        the whole range.  The producer half of a producer/consumer split."""
+        footer = meta.footer
+        lo = 0 if row_start is None else max(0, row_start)
+        hi = footer.num_rows if row_end is None else min(row_end, footer.num_rows)
+        # one footer pass for the whole range, then per-stripe coalescing
+        full = plan_reads(footer, self.feature_ids, 0, row_start=lo, row_end=hi)
+        by_stripe: Dict[int, List[Tuple[int, int, dwrf.StreamInfo]]] = {}
+        for si, fid, s in full.wanted:
+            by_stripe.setdefault(si, []).append((si, fid, s))
+        for si in full.stripe_indices:
+            stripe = footer.stripes[si]
+            wanted = by_stripe.get(si, [])
+            streams = sorted((s for _, _, s in wanted), key=lambda s: s.offset)
+            extents = _coalesce_extents(streams, self.coalesce_window)
+            plan = ReadPlan(
+                extents=extents, wanted=wanted,
+                bytes_wanted=sum(s.length for s in streams),
+                bytes_planned=sum(l for _, l in extents),
+                stripe_indices=[si], stripes_total=len(footer.stripes),
+            )
+            per_stripe, feature_bytes = self._fetch_streams(meta, plan)
+            part = dwrf.decode_stripe_features(
+                stripe, per_stripe.get(si, {}), self.feature_ids
+            )
+            rows_decoded = part.num_rows
+            part, t0, t1 = _trim_stripe(part, stripe, lo, hi)
+            self._record_feature_bytes(feature_bytes)
+            yield StripeRead(
+                stripe_index=si,
+                row_start=stripe.row_start + t0,
+                row_end=stripe.row_start + t1,
+                batch=part,
+                bytes_read=plan.bytes_planned,
+                bytes_used=plan.bytes_wanted,
+                rows_decoded=rows_decoded,
+            )
+
+    def read_partition(
+        self, meta: PartitionMeta, row_limit: Optional[int] = None
+    ) -> ReadResult:
+        return self.read_rows(meta, 0, row_limit if row_limit else None)
 
     def finish_job(self) -> None:
         """Record this job's feature-read footprint into table popularity."""

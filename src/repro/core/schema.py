@@ -178,6 +178,32 @@ class SparseColumn:
         return n
 
 
+def concat_sparse_columns(cols: Sequence[SparseColumn]) -> SparseColumn:
+    """Row-concatenate CSR columns, rebasing offsets; scores are zero-padded
+    when only some columns carry them."""
+    if len(cols) == 1:
+        return cols[0]
+    offs = [np.zeros(1, np.int64)]
+    vals: List[np.ndarray] = []
+    has_scores = any(c.scores is not None for c in cols)
+    scs: List[np.ndarray] = []
+    base = 0
+    for c in cols:
+        offs.append(c.offsets[1:] + base)
+        vals.append(c.values)
+        if has_scores:
+            scs.append(
+                c.scores if c.scores is not None
+                else np.zeros(len(c.values), np.float32)
+            )
+        base += len(c.values)
+    return SparseColumn(
+        offsets=np.concatenate(offs),
+        values=np.concatenate(vals) if vals else np.zeros(0, np.int64),
+        scores=np.concatenate(scs) if has_scores else None,
+    )
+
+
 @dataclasses.dataclass
 class ColumnBatch:
     """A batch of rows in columnar layout: feature id -> column."""
@@ -232,29 +258,16 @@ def concat_batches(batches: List[ColumnBatch]) -> ColumnBatch:
         dense[k] = np.concatenate(parts)
     sparse = {}
     for k in sparse_keys:
-        offs, vals, scs = [np.zeros(1, np.int64)], [], []
-        base = 0
-        has_scores = any(
-            b.sparse.get(k) is not None and b.sparse[k].scores is not None for b in batches
-        )
+        cols = []
         for b in batches:
             col = b.sparse.get(k)
-            if col is None:
-                offs.append(np.full(b.num_rows, base, np.int64))
-                continue
-            offs.append(col.offsets[1:] + base)
-            vals.append(col.values)
-            if has_scores:
-                scs.append(
-                    col.scores if col.scores is not None
-                    else np.zeros(len(col.values), np.float32)
+            if col is None:    # feature absent in this batch: all-empty rows
+                col = SparseColumn(
+                    offsets=np.zeros(b.num_rows + 1, np.int64),
+                    values=np.zeros(0, np.int64),
                 )
-            base += len(col.values)
-        sparse[k] = SparseColumn(
-            offsets=np.concatenate(offs),
-            values=np.concatenate(vals) if vals else np.zeros(0, np.int64),
-            scores=np.concatenate(scs) if scs else None,
-        )
+            cols.append(col)
+        sparse[k] = concat_sparse_columns(cols)
     labels = (
         np.concatenate([b.labels for b in batches])
         if all(b.labels is not None for b in batches)

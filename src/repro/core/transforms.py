@@ -101,7 +101,7 @@ def firstx(col: SparseColumn, x: int) -> SparseColumn:
     lengths = np.minimum(np.diff(col.offsets), x)
     new_off = np.zeros(len(col.offsets), np.int64)
     np.cumsum(lengths, out=new_off[1:])
-    idx = _ragged_take_first(col.offsets, lengths)
+    idx = _ragged_gather(col.offsets[:-1], lengths)
     return SparseColumn(
         offsets=new_off,
         values=col.values[idx],
@@ -109,16 +109,15 @@ def firstx(col: SparseColumn, x: int) -> SparseColumn:
     )
 
 
-def _ragged_take_first(offsets: np.ndarray, lengths: np.ndarray) -> np.ndarray:
+def _ragged_gather(starts: np.ndarray, lengths: np.ndarray) -> np.ndarray:
+    """Indices selecting, for each row i, ``lengths[i]`` consecutive source
+    elements beginning at ``starts[i]``."""
     total = int(lengths.sum())
-    out = np.zeros(total, np.int64)
-    pos = 0
-    starts = offsets[:-1]
-    reps = np.repeat(starts, lengths)
-    within = np.arange(total) - np.repeat(
-        np.concatenate([[0], np.cumsum(lengths)[:-1]]), lengths
-    )
-    return reps + within
+    if total == 0:
+        return np.zeros(0, np.int64)
+    ends = np.cumsum(lengths)
+    within = np.arange(total) - np.repeat(ends - lengths, lengths)
+    return np.repeat(starts, lengths) + within
 
 
 def positive_modulus(col: SparseColumn, m: int) -> SparseColumn:
@@ -218,9 +217,7 @@ def sampling(batch: ColumnBatch, rate: float, seed: int = 0) -> ColumnBatch:
         lengths = np.diff(c.offsets)[keep]
         off = np.zeros(len(keep) + 1, np.int64)
         np.cumsum(lengths, out=off[1:])
-        idx = _ragged_take_first(
-            np.concatenate([c.offsets[keep], [0]]), lengths
-        )
+        idx = _ragged_gather(c.offsets[keep], lengths)
         sparse[k] = SparseColumn(
             offsets=off,
             values=c.values[idx],
@@ -348,7 +345,7 @@ def materialize_dlrm_batch(
         ids = np.zeros((rows, max_ids), np.int64)
         mask = np.zeros((rows, max_ids), np.float32)
         lengths = np.minimum(np.diff(col.offsets), max_ids)
-        take = _ragged_take_first(col.offsets, lengths)
+        take = _ragged_gather(col.offsets[:-1], lengths)
         r_idx = np.repeat(np.arange(rows), lengths)
         c_idx = np.arange(len(take)) - np.repeat(
             np.concatenate([[0], np.cumsum(lengths)[:-1]]), lengths

@@ -1,6 +1,5 @@
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import dwrf
 from repro.core.datagen import DataGenConfig, generate_partition
@@ -66,7 +65,44 @@ def test_large_stripes_reduce_stream_count():
     assert mean_large > mean_small
 
 
-@given(data=st.binary(min_size=0, max_size=2000))
-@settings(max_examples=40, deadline=None)
-def test_stream_codec_roundtrip(data):
-    assert dwrf.decode_stream(dwrf.encode_stream(data)) == data
+@pytest.mark.parametrize("codec", dwrf.available_codecs())
+@pytest.mark.parametrize("seed", range(8))
+def test_stream_codec_roundtrip(codec, seed):
+    rng = np.random.default_rng(seed)
+    size = int(rng.integers(0, 2001))
+    data = rng.integers(0, 256, size=size, dtype=np.uint8).tobytes()
+    enc = dwrf.encode_stream(data, codec=codec)
+    assert enc[0] == dwrf.get_codec(codec).cid
+    assert dwrf.decode_stream(enc) == data
+
+
+def test_zlib_codec_always_available():
+    assert "zlib" in dwrf.available_codecs()
+    assert dwrf.DEFAULT_CODEC in dwrf.available_codecs()
+
+
+def test_unknown_codec_name_raises():
+    with pytest.raises(KeyError):
+        dwrf.encode_stream(b"x", codec="lz77-nope")
+
+
+def test_unknown_codec_id_raises():
+    bad = bytes([255]) + dwrf.encode_stream(b"x")[1:]
+    with pytest.raises(KeyError):
+        dwrf.decode_stream(bad)
+
+
+def test_file_roundtrip_with_explicit_zlib_codec():
+    s, b = _batch(rows=128)
+    f = dwrf.write_dwrf(
+        b, dwrf.DwrfWriterOptions(flattened=True, stripe_rows=64, codec="zlib")
+    )
+    stripe = f.footer.stripes[0]
+    fetch = {
+        (st_.fid, st_.kind): f.data[st_.offset: st_.offset + st_.length]
+        for st_ in stripe.streams
+    }
+    dec = dwrf.decode_stripe_features(stripe, fetch, s.logged_ids)
+    assert dec.num_rows == stripe.num_rows
+    # every fetched stream carries the zlib codec id byte
+    assert all(raw[0] == dwrf.get_codec("zlib").cid for raw in fetch.values())

@@ -1,7 +1,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.optim import (
     OptimizerConfig, adamw_init, adamw_update, clip_by_global_norm,
@@ -52,8 +52,8 @@ def test_bf16_optimizer_state():
     assert np.isfinite(np.asarray(params["w"])).all()
 
 
-@given(st.integers(1, 4), st.integers(1, 64))
-@settings(max_examples=20, deadline=None)
+@pytest.mark.parametrize("ndim", [1, 2])
+@pytest.mark.parametrize("dim", [1, 3, 17, 64])
 def test_update_preserves_shapes_property(ndim, dim):
     shape = (dim,) * min(ndim, 2)
     cfg = OptimizerConfig(warmup_steps=1, total_steps=10)

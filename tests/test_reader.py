@@ -1,10 +1,11 @@
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import dwrf
 from repro.core.datagen import DataGenConfig
-from repro.core.reader import COALESCE_WINDOW, TableReader, plan_reads
+from repro.core.reader import (
+    COALESCE_WINDOW, TableReader, plan_reads, stripes_overlapping,
+)
 from repro.core.schema import make_schema
 from repro.core.warehouse import Warehouse
 
@@ -77,3 +78,42 @@ def test_io_stats_recorded(table):
     assert st_.num_ios > 0 and st_.bytes_read > 0
     pct = st_.percentiles()
     assert pct["p50"] > 0
+
+
+# -- split-scoped planning (stripe pruning) ----------------------------------
+
+
+def test_plan_reads_row_range_prunes_stripes(table):
+    footer = table.partitions[0].footer
+    proj = table.schema.logged_ids[:9]
+    full = plan_reads(footer, proj)
+    sub = plan_reads(footer, proj, row_start=256, row_end=512)
+    assert full.stripe_indices == list(range(len(footer.stripes)))
+    assert sub.stripe_indices == stripes_overlapping(footer, 256, 512)
+    assert len(sub.stripe_indices) < len(full.stripe_indices)
+    assert sub.bytes_planned < full.bytes_planned
+    assert sub.bytes_wanted < full.bytes_wanted
+    # the pruned plan's streams are a subset of the full plan's
+    full_offsets = {s.offset for _, _, s in full.wanted}
+    assert all(s.offset in full_offsets for _, _, s in sub.wanted)
+
+
+def test_stripes_overlapping_boundaries(table):
+    footer = table.partitions[0].footer   # 1024 rows, 256-row stripes
+    assert stripes_overlapping(footer, 0, 256) == [0]
+    assert stripes_overlapping(footer, 256, 257) == [1]
+    assert stripes_overlapping(footer, 255, 257) == [0, 1]
+    assert stripes_overlapping(footer, 0, 1024) == [0, 1, 2, 3]
+    assert stripes_overlapping(footer) == [0, 1, 2, 3]
+    assert stripes_overlapping(footer, 512, 512) == []
+
+
+def test_read_rows_bytes_scale_with_split_not_partition(table):
+    proj = table.schema.logged_ids[:9]
+    r = TableReader(table, proj)
+    meta = table.partitions[0]
+    full = r.read_partition(meta)
+    quarter = r.read_rows(meta, 0, 256)
+    assert quarter.stripes_read == 1 and full.stripes_read == 4
+    assert quarter.bytes_read < full.bytes_read / 2
+    assert quarter.rows_decoded == 256

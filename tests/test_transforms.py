@@ -1,9 +1,17 @@
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.schema import SparseColumn
 from repro.core import transforms as T
+
+
+def _random_lists(rng, n_rows, max_len, lo, hi, empty_frac=0.3):
+    """Seeded stand-in for the hypothesis list-of-int-lists strategy."""
+    out = []
+    for _ in range(n_rows):
+        ln = 0 if rng.random() < empty_frac else int(rng.integers(0, max_len + 1))
+        out.append(rng.integers(lo, hi, size=ln).tolist())
+    return out
 
 
 def _col(lists, scores=None):
@@ -133,10 +141,11 @@ def test_materialize_shapes():
     assert out["sparse_mask"][3, 0].tolist() == [1.0, 1.0]   # truncated to 2
 
 
-@given(st.lists(st.lists(st.integers(-10**9, 10**9), max_size=8), min_size=1, max_size=12),
-       st.integers(1, 6))
-@settings(max_examples=50, deadline=None)
-def test_firstx_property(lists, x):
+@pytest.mark.parametrize("seed", range(10))
+@pytest.mark.parametrize("x", [1, 2, 6])
+def test_firstx_property(seed, x):
+    rng = np.random.default_rng(seed)
+    lists = _random_lists(rng, int(rng.integers(1, 13)), 8, -10**9, 10**9)
     c = _col(lists)
     out = T.firstx(c, x)
     lens = np.diff(out.offsets)
@@ -145,11 +154,60 @@ def test_firstx_property(lists, x):
         np.testing.assert_array_equal(out.row(i), np.asarray(l[:x], np.int64))
 
 
-@given(st.lists(st.lists(st.integers(0, 10**9), max_size=6), min_size=1, max_size=10),
-       st.integers(2, 10**6))
-@settings(max_examples=50, deadline=None)
-def test_hash_range_property(lists, m):
+@pytest.mark.parametrize("seed", range(10))
+@pytest.mark.parametrize("m", [2, 97, 10**6])
+def test_hash_range_property(seed, m):
+    rng = np.random.default_rng(seed)
+    lists = _random_lists(rng, int(rng.integers(1, 11)), 6, 0, 10**9)
     c = _col(lists)
     out = T.sigrid_hash(c, salt=1, max_value=m)
     assert (out.values >= 0).all() and (out.values < m).all()
     np.testing.assert_array_equal(out.offsets, c.offsets)
+
+
+# -- empty-selection edge cases (ISSUE 1 satellite) --------------------------
+
+
+def test_firstx_all_empty_rows():
+    c = _col([[], [], []])
+    out = T.firstx(c, 4)
+    assert out.rows == 3
+    assert out.values.size == 0
+    assert out.offsets.tolist() == [0, 0, 0, 0]
+
+
+def test_ragged_gather_empty():
+    idx = T._ragged_gather(np.zeros(0, np.int64), np.zeros(0, np.int64))
+    assert idx.size == 0 and idx.dtype == np.int64
+
+
+def test_sampling_zero_kept_rows():
+    from repro.core.datagen import DataGenConfig, generate_partition
+    from repro.core.schema import make_schema
+    s = make_schema("t", 4, 2, seed=0)
+    b = generate_partition(s, 0, DataGenConfig(rows_per_partition=64, seed=1))
+    out = T.sampling(b, 0.0, seed=2)
+    assert out.num_rows == 0
+    assert out.labels.shape == (0,)
+    for c in out.sparse.values():
+        assert c.rows == 0 and c.values.size == 0
+
+
+def test_sampling_with_empty_id_lists():
+    b_sparse = _col([[1, 2], [], [3], [], [4, 5, 6]])
+    from repro.core.schema import ColumnBatch
+    b = ColumnBatch(
+        num_rows=5,
+        dense={0: np.arange(5, dtype=np.float32)},
+        sparse={10: b_sparse},
+        labels=np.zeros(5, np.float32),
+    )
+    out = T.sampling(b, 0.99, seed=0)   # keeps most rows, incl. empty ones
+    assert 0 < out.num_rows <= 5
+    c = out.sparse[10]
+    assert c.rows == out.num_rows
+    assert len(c.values) == c.offsets[-1]
+    # each kept row's ids match the source row's ids
+    kept_dense = out.dense[0].astype(np.int64)
+    for i, src_row in enumerate(kept_dense):
+        np.testing.assert_array_equal(c.row(i), b_sparse.row(int(src_row)))
