@@ -1,0 +1,174 @@
+"""Shared stripe-cache + dedup tier (ISSUE 2 tentpole; §5.2 / §7.2).
+
+A combo-window workload — several concurrent DPP sessions over shared
+partitions — measured three ways:
+
+  * storage RX with vs without the shared ``StripeCache`` (acceptance:
+    cached ≤ 0.6x the no-cache baseline for ≥2 overlapping sessions),
+  * byte-identity of the served batches against the uncached read path,
+    with ``over_read_ratio == 1.0`` for stripe-aligned sessions,
+  * IOPS/W for HDD-only vs HDD+flash-cache vs SSD-only on the same
+    extent trace (the §7.2 326%-IOPS/W-at-9%-capacity/W trade).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import dwrf
+from repro.core.cache import StripeCache, iops_per_watt
+from repro.core.datagen import DataGenConfig
+from repro.core.dpp import DPPService, SessionSpec
+from repro.core.dpp.simulator import CacheTierSpec, RM1, dsi_power_split
+from repro.core.schema import make_schema
+from repro.core.tectonic import HDD, SSD, TectonicFS
+from repro.core.transforms import default_dlrm_pipeline
+from repro.core.warehouse import Warehouse
+
+ROWS = 2048
+STRIPE = 256
+N_SESSIONS = 3
+
+
+def _warehouse(rows: int, media=HDD) -> Warehouse:
+    schema = make_schema("bc", 32, 8, seed=7)
+    wh = Warehouse(TectonicFS(media=media))
+    t = wh.create_table(schema)
+    t.generate(2, DataGenConfig(rows_per_partition=rows, seed=8),
+               dwrf.DwrfWriterOptions(flattened=True, stripe_rows=STRIPE))
+    return wh
+
+
+def _spec(wh: Warehouse, batch_size: int = 256) -> SessionSpec:
+    t = wh.table("bc")
+    dense = t.schema.dense_ids[:8]
+    sparse = t.schema.sparse_ids[:4]
+    pipe = default_dlrm_pipeline(dense, sparse, hash_size=1000)
+    return SessionSpec(
+        table="bc", partitions=tuple(t.partitions),
+        feature_ids=tuple(pipe.required_features()),
+        transform_specs=tuple(pipe.specs),
+        batch_size=batch_size, rows_per_split=STRIPE,
+        dense_keys=tuple(f"d{f}" for f in dense),
+        sparse_keys=tuple(f"s{f}" for f in sparse),
+        max_ids_per_feature=8,
+    )
+
+
+def _run_sessions(wh: Warehouse, n_sessions: int, cache, timeout_s: float):
+    """Run ``n_sessions`` concurrent identical sessions (a combo window);
+    returns (per-session batches, fleet metrics, service)."""
+    svc = DPPService(wh, stripe_cache=cache, enable_stripe_cache=cache is not None)
+    for i in range(n_sessions):
+        svc.create_session(f"job{i}", _spec(wh), n_workers=2)
+    results = svc.run_all(timeout_s=timeout_s)
+    return results, svc.fleet_metrics(), svc
+
+
+def _batch_signature(batches: List[Dict[str, np.ndarray]]) -> List[tuple]:
+    """Order-independent content signature of a session's served batches."""
+    sig = []
+    for b in batches:
+        sig.append(tuple(
+            (k, b[k].shape, float(np.nan_to_num(b[k]).sum())) for k in sorted(b)
+        ))
+    return sorted(sig)
+
+
+def run(quick: bool = False) -> None:
+    rows = 512 if quick else ROWS
+    n_sessions = 2 if quick else N_SESSIONS
+    timeout_s = 60.0 if quick else 180.0
+
+    # -- no-cache baseline --------------------------------------------------
+    wh0 = _warehouse(rows)
+    res0, m0, _ = _run_sessions(wh0, n_sessions, cache=None, timeout_s=timeout_s)
+    baseline_rx = m0.storage_rx_bytes
+    hdd_stats = wh0.fs.stats
+    hdd_ipw = iops_per_watt(
+        hdd_stats.num_ios, hdd_stats.total_time_s, wh0.fs.power_W()
+    )
+    emit(
+        f"cache.baseline_hdd.{n_sessions}_sessions", 0.0,
+        f"storage_rx={baseline_rx} ios={hdd_stats.num_ios} "
+        f"iops_per_watt={hdd_ipw:.2f} over_read={m0.over_read_ratio:.3f}",
+    )
+
+    # -- shared stripe cache (HDD + DRAM/flash tier) ------------------------
+    wh1 = _warehouse(rows)
+    # DRAM sized below the combo-window working set so the flash victim
+    # tier actually absorbs spill traffic (and shows up in the IOPS/W row)
+    cache = StripeCache(
+        dram_capacity_bytes=192 * 1024,
+        flash_capacity_bytes=256 * 1024 * 1024,
+        flash_admit_reads=1 if quick else 2,
+    )
+    res1, m1, svc1 = _run_sessions(wh1, n_sessions, cache=cache, timeout_s=timeout_s)
+    cut = m1.storage_rx_bytes / max(baseline_rx, 1)
+    # cache fleet = HDD storage nodes + one flash cache device + DRAM
+    tier_io = [wh1.fs.stats, cache.flash.io, cache.dram.io]
+    cached_time = sum(s.total_time_s for s in tier_io)
+    cached_ios = sum(s.num_ios for s in tier_io)
+    cached_power = (
+        wh1.fs.power_W() + cache.flash_media.power_W + cache.dram_media.power_W
+    )
+    cached_ipw = iops_per_watt(cached_ios, cached_time, cached_power)
+    emit(
+        f"cache.shared_stripe_cache.{n_sessions}_sessions", 0.0,
+        f"storage_rx={m1.storage_rx_bytes} cache_rx={m1.cache_rx_bytes} "
+        f"rx_cut={cut:.3f}x hit_rate={cache.hit_rate:.3f} "
+        f"dram_hits={cache.dram.hits} flash_hits={cache.flash.hits} "
+        f"iops_per_watt={cached_ipw:.2f} over_read={m1.over_read_ratio:.3f} "
+        f"dedup_ratio={cache.dedup.stats.dedup_ratio:.2f}",
+    )
+    assert cut <= 0.6, f"storage RX cut {cut:.3f}x misses the 0.6x acceptance bar"
+    assert m1.over_read_ratio == 1.0, m1.over_read_ratio
+    assert cached_ipw > hdd_ipw, (cached_ipw, hdd_ipw)
+
+    # a late-arriving job (combo-window straggler): its working set was
+    # evicted from the small DRAM tier but admitted to flash, so it is
+    # served by flash hits instead of HDD extents
+    late = svc1.create_session("late", _spec(wh1), n_workers=2)
+    late.run_to_completion(timeout_s=timeout_s)
+    lm = late.worker_metrics()
+    emit(
+        "cache.late_session_flash_tier", 0.0,
+        f"storage_rx={lm.storage_rx_bytes} cache_rx={lm.cache_rx_bytes} "
+        f"dram_hits={cache.dram.hits} flash_hits={cache.flash.hits} "
+        f"flash_stored={cache.flash.bytes_stored}",
+    )
+
+    # served batches must be byte-identical to the uncached path
+    for name in res0:
+        assert _batch_signature(res0[name]) == _batch_signature(res1[name]), (
+            f"cached session {name} served different bytes than uncached"
+        )
+    emit(f"cache.byte_identity.{n_sessions}_sessions", 0.0, "identical=True")
+
+    # -- SSD-only comparison (same workload, no cache) ----------------------
+    wh2 = _warehouse(rows, media=SSD)
+    _run_sessions(wh2, n_sessions, cache=None, timeout_s=timeout_s)
+    ssd_stats = wh2.fs.stats
+    ssd_ipw = iops_per_watt(
+        ssd_stats.num_ios, ssd_stats.total_time_s, wh2.fs.power_W()
+    )
+    emit(
+        "cache.media_iops_per_watt", 0.0,
+        f"hdd={hdd_ipw:.2f} hdd_flash_cache={cached_ipw:.2f} ssd={ssd_ipw:.2f} "
+        f"cache_vs_hdd={cached_ipw / max(hdd_ipw, 1e-9):.1f}x",
+    )
+
+    # -- fleet power: Fig. 1 with the cache tier absorbing the hit traffic --
+    for tag, cache_spec in (
+        ("no_cache", None),
+        # byte-weighted: the fraction of ingested bytes the cache served
+        ("cache_tier", CacheTierSpec(hit_frac=m1.cache_served_frac)),
+    ):
+        p = dsi_power_split(RM1, n_trainers=16, cache=cache_spec)
+        emit(
+            f"cache.power_split.{tag}", 0.0,
+            f"storage_frac={p['storage_frac']:.4f} "
+            f"cache_frac={p.get('cache_frac', 0.0):.4f}",
+        )

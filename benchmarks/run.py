@@ -1,18 +1,24 @@
 """Benchmark driver: one section per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--only storage,dpp,...]
+  PYTHONPATH=src python -m benchmarks.run [--only storage,dpp,...] [--quick]
 
 Prints ``name,us_per_call,derived`` CSV rows.
+
+``--quick`` is the CI smoke path: every section module is imported (so
+benchmarks can never silently rot), and sections whose ``run`` accepts a
+``quick`` flag are executed with a scaled-down workload.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import traceback
 
 SECTIONS = [
     "storage",          # Tables 3/4/5/6
     "reader",           # split-scoped streaming reads (ISSUE 1)
+    "cache",            # shared stripe cache + dedup tier (ISSUE 2)
     "popularity",       # Fig 7
     "dpp",              # Table 9 / Fig 9 / Table 10
     "trainer",          # Table 8 / Fig 8 / Table 7
@@ -26,6 +32,8 @@ SECTIONS = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated section list")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: import every section, run the quick-capable ones")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -36,7 +44,13 @@ def main() -> None:
         print(f"# === {section} ===")
         try:
             mod = __import__(f"benchmarks.bench_{section}", fromlist=["run"])
-            mod.run()
+            if args.quick:
+                if "quick" in inspect.signature(mod.run).parameters:
+                    mod.run(quick=True)
+                else:
+                    print(f"# {section}: import-only (no quick mode)")
+            else:
+                mod.run()
         except Exception as e:  # keep going; report at the end
             failures.append((section, e))
             traceback.print_exc()

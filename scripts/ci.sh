@@ -1,6 +1,8 @@
 #!/usr/bin/env bash
-# Tier-1 gate: the whole suite, one command.
+# Tier-1 gate: the whole suite + benchmark smoke, one command.
 #   ./scripts/ci.sh [extra pytest args...]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+# benchmark smoke: every bench module must import; quick-capable sections run
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --quick

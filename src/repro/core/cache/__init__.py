@@ -1,0 +1,9 @@
+from repro.core.cache.dedup import CacheKey, DedupIndex, DedupStats, stripe_digest
+from repro.core.cache.stripe_cache import (
+    DRAM_TIER,
+    FLASH_TIER,
+    CacheLookup,
+    StripeCache,
+    TierStats,
+    iops_per_watt,
+)

@@ -1,0 +1,313 @@
+"""Two-tier shared stripe cache: DRAM + simulated flash (the "DSI cache
+tier" of §7.2).
+
+Concurrent training jobs re-read the same popular partitions (§5.2/§6);
+serving that re-read traffic from HDD forces the ~8x
+throughput-to-storage overprovisioning of §7.2.  This cache sits between
+``TectonicFS`` and the DPP fleet and turns cross-job stripe overlap into
+DRAM/flash hits:
+
+  * **DRAM tier** — small, recency-managed (LRU).  Every miss is admitted
+    here; a byte served from DRAM costs (nearly) nothing.
+  * **Flash tier** — large victim cache built on ``MediaSpec``/``IOStats``
+    from ``tectonic.py``.  Admission is *popularity-aware*: a DRAM
+    eviction victim is written to flash only once its content has been
+    read at least ``flash_admit_reads`` times (tracked with a
+    ``PopularityTracker``), so one-touch scan traffic cannot wash the
+    flash tier (the classic cache-pollution failure for training scans).
+
+Keys come from ``DedupIndex.resolve`` and are content-addressed where
+possible, so byte-identical stripes across partitions/tables occupy one
+entry (RecD-style dedup).  Per-tier hit/eviction/byte counters plus the
+flash ``IOStats`` make the §7.2 IOPS/W comparison directly computable via
+``iops_per_watt``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+from typing import Dict, Optional, Tuple
+
+from repro.core.cache.dedup import CacheKey, DedupIndex
+from repro.core.popularity import PopularityTracker
+from repro.core.tectonic import IOStats, MediaSpec
+
+# Cache-tier device models.  DRAM is effectively seek-free; FLASH is a
+# single NVMe cache device (drive-level power, unlike the SSD *node* spec
+# in tectonic.py), keeping the §7.2 IOPS/W ordering HDD < flash < DRAM.
+DRAM_TIER = MediaSpec(name="dram", seek_ms=0.001, transfer_MBps=20_000.0,
+                      capacity_TB=0.000256, power_W=5.0)
+FLASH_TIER = MediaSpec(name="flash", seek_ms=0.02, transfer_MBps=3_500.0,
+                       capacity_TB=1.92, power_W=25.0)
+
+
+def iops_per_watt(num_ios: int, time_s: float, power_W: float) -> float:
+    """Served IOPS per watt for a tier/fleet that spent ``time_s`` of
+    device time serving ``num_ios`` I/Os at ``power_W`` draw."""
+    if time_s <= 0 or power_W <= 0:
+        return 0.0
+    return (num_ios / time_s) / power_W
+
+
+@dataclasses.dataclass
+class TierStats:
+    name: str
+    hits: int = 0
+    bytes_served: int = 0
+    admitted: int = 0
+    bytes_stored: int = 0
+    evictions: int = 0
+    rejected: int = 0              # flash admissions refused (unpopular)
+    io: IOStats = dataclasses.field(default_factory=IOStats)
+
+
+@dataclasses.dataclass
+class CacheLookup:
+    payload: bytes
+    tier: str                      # "dram" | "flash"
+
+
+class StripeCache:
+    """Shared, thread-safe, two-tier extent cache for the DPP fleet."""
+
+    def __init__(
+        self,
+        dram_capacity_bytes: int = 64 * 1024 * 1024,
+        flash_capacity_bytes: int = 512 * 1024 * 1024,
+        dram_media: MediaSpec = DRAM_TIER,
+        flash_media: MediaSpec = FLASH_TIER,
+        flash_admit_reads: int = 2,
+        dedup: Optional[DedupIndex] = None,
+    ):
+        self.dedup = dedup or DedupIndex()
+        self.dram_capacity_bytes = dram_capacity_bytes
+        self.flash_capacity_bytes = flash_capacity_bytes
+        self.dram_media = dram_media
+        self.flash_media = flash_media
+        self.flash_admit_reads = flash_admit_reads
+        self.popularity = PopularityTracker()
+        self._lock = threading.Lock()
+        self._dram: "OrderedDict[CacheKey, bytes]" = OrderedDict()
+        self._flash: "OrderedDict[CacheKey, bytes]" = OrderedDict()
+        # (kind, ident) -> stored keys of that stripe/path, for sub-range
+        # serving: a narrower projection of an already-cached range hits
+        self._groups: Dict[Tuple, set] = {}
+        # single-flight: keys one reader is currently filling; concurrent
+        # readers of the same stripe wait for the fill instead of issuing
+        # a duplicate storage I/O (request coalescing)
+        self._inflight: Dict[CacheKey, threading.Event] = {}
+        self.dram = TierStats("dram")
+        self.flash = TierStats("flash")
+        self.misses = 0
+
+    # -- key resolution ------------------------------------------------------
+
+    def resolve(self, path: str, offset: int, length: int) -> CacheKey:
+        return self.dedup.resolve(path, offset, length)
+
+    def invalidate_path(self, path: str) -> None:
+        """The file at ``path`` was rewritten: drop its content mapping and
+        any path-addressed entries (content entries stay valid — they are
+        addressed by the bytes themselves)."""
+        with self._lock:
+            self.dedup.invalidate(path)
+            for store, stats in ((self._dram, self.dram), (self._flash, self.flash)):
+                stale = [k for k in store if k[0] == "p" and k[1] == path]
+                for k in stale:
+                    stats.bytes_stored -= len(store.pop(k))
+                    stats.evictions += 1
+                    self._note_locked(k)
+
+    # -- read path -----------------------------------------------------------
+
+    def _record_read(self, key: CacheKey, nbytes: int) -> None:
+        # popularity is tracked per content identity: one "job read" of
+        # nbytes against the key's stable integer id
+        self.popularity.record_job({hash(key): float(nbytes)})
+
+    def _containing_key_locked(self, key: CacheKey) -> Optional[CacheKey]:
+        """A stored key of the same stripe/path whose range covers ``key``'s
+        (the key itself included); DRAM copies preferred."""
+        off, ln = key[2], key[3]
+        best = None
+        for k in self._groups.get(key[:2], ()):
+            if k[2] <= off and off + ln <= k[2] + k[3]:
+                if k in self._dram:
+                    return k
+                best = k
+        return best
+
+    def _note_locked(self, key: CacheKey) -> None:
+        """Sync ``key``'s group-index membership with the tier stores."""
+        g = key[:2]
+        if key in self._dram or key in self._flash:
+            self._groups.setdefault(g, set()).add(key)
+        else:
+            s = self._groups.get(g)
+            if s is not None:
+                s.discard(key)
+                if not s:
+                    del self._groups[g]
+
+    def _lookup_locked(self, key: CacheKey) -> Optional[CacheLookup]:
+        k = self._containing_key_locked(key)
+        if k is None:
+            return None
+        stored = self._dram.get(k)
+        if stored is not None:
+            store, stats, media, tier = (
+                self._dram, self.dram, self.dram_media, "dram"
+            )
+        else:
+            stored = self._flash[k]
+            store, stats, media, tier = (
+                self._flash, self.flash, self.flash_media, "flash"
+            )
+        payload = (
+            stored if k == key
+            else stored[key[2] - k[2]: key[2] - k[2] + key[3]]
+        )
+        store.move_to_end(k)
+        self._record_read(key, len(payload))
+        stats.hits += 1
+        stats.bytes_served += len(payload)
+        stats.io.record(len(payload), media)
+        if tier == "flash":
+            # promote the whole entry so the next read is a DRAM hit
+            self._admit_dram_locked(k, stored)
+        return CacheLookup(payload, tier)
+
+    def get(self, key: CacheKey) -> Optional[CacheLookup]:
+        with self._lock:
+            hit = self._lookup_locked(key)
+            if hit is None:
+                self.misses += 1
+                self._record_read(key, 0)   # a miss still counts one read
+            return hit
+
+    def get_or_claim(self, key: CacheKey, timeout_s: float = 10.0) -> Optional[CacheLookup]:
+        """``get`` with single-flight fills: on a cold key the first caller
+        claims the fill (returns ``None``; it MUST ``admit`` or ``abort``
+        the key), and concurrent callers block until the fill lands, then
+        hit — one storage I/O per stripe no matter how many overlapping
+        sessions miss it simultaneously."""
+        while True:
+            with self._lock:
+                hit = self._lookup_locked(key)
+                if hit is not None:
+                    return hit
+                ev = self._inflight.get(key)
+                if ev is None:
+                    self._inflight[key] = threading.Event()
+                    self.misses += 1
+                    self._record_read(key, 0)
+                    return None
+            ev.wait(timeout_s)   # filled or aborted; re-check either way
+
+    def peek(self, key: CacheKey) -> bool:
+        """Non-mutating membership probe (used by read planning)."""
+        with self._lock:
+            return self._containing_key_locked(key) is not None
+
+    # -- admission / eviction ------------------------------------------------
+
+    def admit(self, key: CacheKey, payload: bytes) -> None:
+        """Admit a freshly-read extent (and release any single-flight claim
+        on it).  Always enters DRAM; DRAM victims spill to flash only if
+        their content has proven popular."""
+        with self._lock:
+            k = self._containing_key_locked(key)
+            if k is None or k == key:
+                self._admit_dram_locked(key, payload)
+            # else: a wider stored range already serves this key
+            self._release_locked(key)
+
+    def abort(self, key: CacheKey) -> None:
+        """Release a single-flight claim without filling it (the claiming
+        read failed); blocked readers re-race for the claim."""
+        with self._lock:
+            self._release_locked(key)
+
+    def _release_locked(self, key: CacheKey) -> None:
+        ev = self._inflight.pop(key, None)
+        if ev is not None:
+            ev.set()
+
+    def _admit_dram_locked(self, key: CacheKey, payload: bytes) -> None:
+        if len(payload) > self.dram_capacity_bytes:
+            self._admit_flash_locked(key, payload)
+            return
+        if key in self._dram:
+            self._dram.move_to_end(key)
+            return
+        self._dram[key] = payload
+        self.dram.admitted += 1
+        self.dram.bytes_stored += len(payload)
+        self._note_locked(key)
+        while self.dram.bytes_stored > self.dram_capacity_bytes and len(self._dram) > 1:
+            vk, vp = self._dram.popitem(last=False)
+            self.dram.bytes_stored -= len(vp)
+            self.dram.evictions += 1
+            self._admit_flash_locked(vk, vp)
+            self._note_locked(vk)
+
+    def _is_popular(self, key: CacheKey) -> bool:
+        return self.popularity.read_count_by_feature.get(
+            hash(key), 0
+        ) >= self.flash_admit_reads
+
+    def _admit_flash_locked(self, key: CacheKey, payload: bytes) -> None:
+        if key in self._flash:
+            self._flash.move_to_end(key)
+            return
+        if len(payload) > self.flash_capacity_bytes or not self._is_popular(key):
+            self.flash.rejected += 1
+            return
+        self._flash[key] = payload
+        self.flash.admitted += 1
+        self.flash.bytes_stored += len(payload)
+        self._note_locked(key)
+        # flash admission is a device write: charge it to the tier's I/O model
+        self.flash.io.record(len(payload), self.flash_media)
+        while self.flash.bytes_stored > self.flash_capacity_bytes and len(self._flash) > 1:
+            vk, vp = self._flash.popitem(last=False)
+            self.flash.bytes_stored -= len(vp)
+            self.flash.evictions += 1
+            self._note_locked(vk)
+
+    # -- reporting -----------------------------------------------------------
+
+    @property
+    def hits(self) -> int:
+        return self.dram.hits + self.flash.hits
+
+    @property
+    def bytes_served(self) -> int:
+        return self.dram.bytes_served + self.flash.bytes_served
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def tier_iops_per_watt(self) -> Dict[str, float]:
+        return {
+            "dram": iops_per_watt(self.dram.io.num_ios, self.dram.io.total_time_s,
+                                  self.dram_media.power_W),
+            "flash": iops_per_watt(self.flash.io.num_ios, self.flash.io.total_time_s,
+                                   self.flash_media.power_W),
+        }
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "hit_rate": self.hit_rate,
+            "dram_hits": float(self.dram.hits),
+            "flash_hits": float(self.flash.hits),
+            "misses": float(self.misses),
+            "bytes_served": float(self.bytes_served),
+            "dram_bytes_stored": float(self.dram.bytes_stored),
+            "flash_bytes_stored": float(self.flash.bytes_stored),
+            "dedup_ratio": self.dedup.stats.dedup_ratio,
+            "unique_stripes": float(self.dedup.unique_stripes),
+        }

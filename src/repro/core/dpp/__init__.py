@@ -1,4 +1,4 @@
 from repro.core.dpp.master import DPPMaster, SessionSpec, Split, AutoScaler
 from repro.core.dpp.worker import DPPWorker, WorkerMetrics
 from repro.core.dpp.client import DPPClient
-from repro.core.dpp.service import DPPSession
+from repro.core.dpp.service import DPPService, DPPSession

@@ -238,24 +238,49 @@ class PowerSpec:
     storage_node_MBps: float = 1500.0     # ~30-disk HDD node at coalesced DSI I/O sizes
 
 
+@dataclasses.dataclass(frozen=True)
+class CacheTierSpec:
+    """A shared DRAM/flash cache tier in front of the HDD fleet (§7.2).
+
+    ``hit_frac`` is the fraction of storage-read **bytes** the tier absorbs
+    — feed it a byte-weighted measurement such as
+    ``WorkerMetrics.cache_served_frac``, not the request-count
+    ``StripeCache.hit_rate`` (sub-range hits and whole-stripe misses have
+    very different sizes).  Cache nodes serve far more MB/s per watt than
+    HDD storage nodes, which is where the IOPS/W win comes from.
+    """
+    hit_frac: float
+    tier_node_W: float = 75.0             # flash cache node (NVMe + host share)
+    tier_node_MBps: float = 6000.0
+
+
 def dsi_power_split(
     w: ModelWorkload,
     n_trainers: int,
     node: NodeSpec = C_V1,
     power: PowerSpec = PowerSpec(),
     storage_amplification: float = 1.0,   # over-read already in byte ratios
+    cache: Optional[CacheTierSpec] = None,
 ) -> Dict[str, float]:
-    """Fig. 1: storage/preprocessing/training power split for one job."""
+    """Fig. 1: storage/preprocessing/training power split for one job.
+    With a ``CacheTierSpec``, the hit fraction of read traffic moves from
+    HDD storage nodes to (cheaper-per-byte-served) cache-tier nodes."""
     n_workers = workers_per_trainer(w, node) * n_trainers
     storage_MBps = w.trainer_gbps * 1e3 * n_trainers * (
         w.sample_bytes_storage / w.sample_bytes_tensor
     ) * storage_amplification
+    cache_MBps = 0.0
+    if cache is not None:
+        cache_MBps = storage_MBps * cache.hit_frac
+        storage_MBps -= cache_MBps
     n_storage = storage_MBps / power.storage_node_MBps
     p = {
         "training_W": n_trainers * power.trainer_node_W,
         "preprocessing_W": n_workers * power.dpp_node_W,
         "storage_W": n_storage * power.storage_node_W,
     }
+    if cache is not None:
+        p["cache_W"] = cache_MBps / cache.tier_node_MBps * cache.tier_node_W
     total = sum(p.values())
     p.update({k.replace("_W", "_frac"): v / total for k, v in list(p.items())})
     return p

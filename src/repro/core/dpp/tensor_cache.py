@@ -73,9 +73,15 @@ class TensorCache:
             return entry[0]
 
     def put(self, key: Tuple, batches: List[Dict[str, np.ndarray]], cpu_s: float) -> None:
+        """Insert a split's batches.  Idempotent on key: a split key fully
+        determines its content (table, partition, row range, pipeline
+        fingerprint), so concurrent workers racing on the same split may
+        each call ``put`` — the first stored entry wins and later inserts
+        only refresh its LRU recency instead of re-storing equal bytes."""
         nbytes = sum(sum(a.nbytes for a in b.values()) for b in batches)
         with self._lock:
             if key in self._data:
+                self._data.move_to_end(key)
                 return
             while self.stats.bytes_stored + nbytes > self.capacity_bytes and self._data:
                 _, (old, _) = self._data.popitem(last=False)

@@ -34,7 +34,8 @@ from repro.core.warehouse import Table
 
 @dataclasses.dataclass
 class WorkerMetrics:
-    storage_rx_bytes: int = 0          # compressed, from storage
+    storage_rx_bytes: int = 0          # compressed, served by storage nodes
+    cache_rx_bytes: int = 0            # compressed, served by the stripe cache
     extract_out_bytes: int = 0         # decoded columnar bytes (transform RX)
     tx_bytes: int = 0                  # materialized tensor bytes (transform TX)
     extract_s: float = 0.0
@@ -53,6 +54,16 @@ class WorkerMetrics:
     @property
     def busy_s(self) -> float:
         return self.extract_s + self.transform_s + self.load_s
+
+    @property
+    def ingest_rx_bytes(self) -> int:
+        """Total compressed bytes ingested, whatever tier served them."""
+        return self.storage_rx_bytes + self.cache_rx_bytes
+
+    @property
+    def cache_served_frac(self) -> float:
+        total = self.ingest_rx_bytes
+        return self.cache_rx_bytes / total if total else 0.0
 
     @property
     def over_read_ratio(self) -> float:
@@ -252,7 +263,8 @@ class DPPWorker:
                     raise item
                 sr = item
                 m.extract_s += extract_dt
-                m.storage_rx_bytes += sr.bytes_read
+                m.storage_rx_bytes += sr.bytes_from_storage
+                m.cache_rx_bytes += sr.bytes_from_cache
                 m.stripes_read += 1
                 m.rows_decoded += sr.rows_decoded
                 m.extract_out_bytes += sr.batch.nbytes()

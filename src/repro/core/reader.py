@@ -27,7 +27,7 @@ import numpy as np
 
 from repro.core import dwrf
 from repro.core.schema import ColumnBatch
-from repro.core.tectonic import IOStats, TectonicFS
+from repro.core.tectonic import ExtentRead, IOStats, TectonicFS
 from repro.core.warehouse import PartitionMeta, Table
 
 COALESCE_WINDOW = int(1.25 * 1024 * 1024)   # §7.5
@@ -41,6 +41,7 @@ class ReadPlan:
     bytes_planned: int
     stripe_indices: List[int] = dataclasses.field(default_factory=list)
     stripes_total: int = 0
+    bytes_cached_planned: int = 0      # planned bytes the stripe cache holds
 
     @property
     def over_read_ratio(self) -> float:
@@ -57,6 +58,8 @@ class ReadResult:
     stripes_read: int = 0
     stripes_total: int = 0
     rows_decoded: int = 0
+    bytes_from_cache: int = 0    # of bytes_read, served by the stripe cache
+    bytes_from_storage: int = 0
 
 
 @dataclasses.dataclass
@@ -70,6 +73,8 @@ class StripeRead:
     bytes_read: int
     bytes_used: int
     rows_decoded: int            # stripe rows decoded (>= row_end - row_start)
+    bytes_from_cache: int = 0    # of bytes_read, served by the stripe cache
+    bytes_from_storage: int = 0
 
 
 def _trim_stripe(
@@ -123,11 +128,16 @@ def plan_reads(
     include_labels: bool = True,
     row_start: Optional[int] = None,
     row_end: Optional[int] = None,
+    cache=None,
+    path: Optional[str] = None,
 ) -> ReadPlan:
     """Build the extent list for a feature projection over one file.
 
     With a row range, only the stripes overlapping [row_start, row_end)
-    are planned — the split-scoped read path.
+    are planned — the split-scoped read path.  With a ``StripeCache`` and
+    the file's ``path``, each planned extent is probed (non-mutating) and
+    ``bytes_cached_planned`` reports how much the cache would serve —
+    extent reads then only hit storage on miss.
     """
     want_f = set(feature_ids)
     stripe_idx = stripes_overlapping(footer, row_start, row_end)
@@ -147,10 +157,19 @@ def plan_reads(
     bytes_wanted = sum(s.length for s in streams)
     extents = _coalesce_extents(streams, coalesce_window)
     bytes_planned = sum(l for _, l in extents)
+    bytes_cached = 0
+    if cache is not None and path is not None:
+        # probe at stripe-segment granularity — the cache's storage unit —
+        # so window-coalesced extents still report their cached portions
+        for off, ln in extents:
+            for seg_off, seg_len in cache.dedup.segments(path, off, ln):
+                if cache.peek(cache.resolve(path, seg_off, seg_len)):
+                    bytes_cached += seg_len
     return ReadPlan(
         extents=extents, wanted=wanted,
         bytes_wanted=bytes_wanted, bytes_planned=bytes_planned,
         stripe_indices=stripe_idx, stripes_total=len(footer.stripes),
+        bytes_cached_planned=bytes_cached,
     )
 
 
@@ -172,13 +191,13 @@ class TableReader:
 
     def _fetch_streams(
         self, meta: PartitionMeta, plan: ReadPlan
-    ) -> Tuple[Dict[int, Dict[Tuple[int, str], bytes]], Dict[int, int]]:
+    ) -> Tuple[Dict[int, Dict[Tuple[int, str], bytes]], Dict[int, int], "ExtentRead"]:
         """Execute a plan: fetch extents, slice each wanted stream back out
-        of its (possibly merged) extent.  Returns per-stripe raw stream bytes
-        and per-feature byte counts."""
-        blobs = self.table.fs.read_extents(meta.path, plan.extents)
+        of its (possibly merged) extent.  Returns per-stripe raw stream bytes,
+        per-feature byte counts, and the cache/storage source accounting."""
+        io = self.table.fs.read_extents_ex(meta.path, plan.extents)
         extent_map: List[Tuple[int, bytes]] = [
-            (off, blob) for (off, _), blob in zip(plan.extents, blobs)
+            (off, blob) for (off, _), blob in zip(plan.extents, io.blobs)
         ]
         extent_offsets = np.array([e[0] for e in extent_map])
 
@@ -191,7 +210,7 @@ class TableReader:
             per_stripe.setdefault(si, {})[(s.fid, s.kind)] = raw
             if fid >= 0:
                 feature_bytes[fid] = feature_bytes.get(fid, 0) + s.length
-        return per_stripe, feature_bytes
+        return per_stripe, feature_bytes, io
 
     def _record_feature_bytes(self, feature_bytes: Dict[int, int]) -> None:
         for fid, nb in feature_bytes.items():
@@ -211,8 +230,9 @@ class TableReader:
         plan = plan_reads(
             footer, self.feature_ids, self.coalesce_window,
             row_start=lo, row_end=hi,
+            cache=self.table.fs.cache, path=meta.path,
         )
-        per_stripe, feature_bytes = self._fetch_streams(meta, plan)
+        per_stripe, feature_bytes, io = self._fetch_streams(meta, plan)
 
         from repro.core.schema import concat_batches
 
@@ -239,6 +259,8 @@ class TableReader:
             stripes_read=len(plan.stripe_indices),
             stripes_total=plan.stripes_total,
             rows_decoded=rows_decoded,
+            bytes_from_cache=io.cache_bytes,
+            bytes_from_storage=io.storage_bytes,
         )
 
     def iter_stripes(
@@ -269,7 +291,7 @@ class TableReader:
                 bytes_planned=sum(l for _, l in extents),
                 stripe_indices=[si], stripes_total=len(footer.stripes),
             )
-            per_stripe, feature_bytes = self._fetch_streams(meta, plan)
+            per_stripe, feature_bytes, io = self._fetch_streams(meta, plan)
             part = dwrf.decode_stripe_features(
                 stripe, per_stripe.get(si, {}), self.feature_ids
             )
@@ -284,6 +306,8 @@ class TableReader:
                 bytes_read=plan.bytes_planned,
                 bytes_used=plan.bytes_wanted,
                 rows_decoded=rows_decoded,
+                bytes_from_cache=io.cache_bytes,
+                bytes_from_storage=io.storage_bytes,
             )
 
     def read_partition(

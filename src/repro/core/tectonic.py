@@ -13,6 +13,7 @@ gap; SSD nodes give 326% IOPS/W at 9% capacity/W relative to HDD.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -101,6 +102,19 @@ class StorageNode:
 
 
 @dataclasses.dataclass
+class ExtentRead:
+    """Extent payloads plus which tier served each byte."""
+    blobs: List[bytes]
+    storage_bytes: int = 0
+    dram_bytes: int = 0
+    flash_bytes: int = 0
+
+    @property
+    def cache_bytes(self) -> int:
+        return self.dram_bytes + self.flash_bytes
+
+
+@dataclasses.dataclass
 class _BlockRef:
     node_ids: Tuple[int, ...]      # replica placements
     data_off: int                  # offset into the file byte string
@@ -116,6 +130,15 @@ class TectonicFS:
         self._blocks: Dict[str, List[_BlockRef]] = {}
         self._rng = np.random.default_rng(seed)
         self.stats = IOStats()
+        self.cache = None                  # optional StripeCache (attach_cache)
+        # many sessions' worker threads read one fs: keep the fleet/node
+        # accounting consistent (the payload path itself is immutable bytes)
+        self._stats_lock = threading.Lock()
+
+    def attach_cache(self, cache) -> None:
+        """Install a shared ``StripeCache``: subsequent ``read_extents``
+        calls are served from it on hit and admit into it on miss."""
+        self.cache = cache
 
     # -- write path ---------------------------------------------------------
 
@@ -134,12 +157,25 @@ class TectonicFS:
 
     def append(self, path: str, data: bytes) -> None:
         base = self._files.get(path, b"")
+        # release the old placement before re-creating, otherwise per-node
+        # used_bytes double-counts the existing bytes on every append
+        for ref in self._blocks.get(path, ()):
+            nbytes = min(BLOCK_BYTES, len(base) - ref.data_off)
+            for nid in ref.node_ids:
+                self.nodes[nid].used_bytes -= nbytes
         self._files.pop(path, None)
         self._blocks.pop(path, None)
+        if self.cache is not None:
+            self.cache.invalidate_path(path)
         self.create(path, base + data)
 
     def exists(self, path: str) -> bool:
         return path in self._files
+
+    def peek(self, path: str) -> bytes:
+        """Accounting-free access to a file's bytes (write-side plumbing,
+        e.g. dedup registration) — never use on the training read path."""
+        return self._files[path]
 
     def size(self, path: str) -> int:
         return len(self._files[path])
@@ -158,17 +194,77 @@ class TectonicFS:
     ) -> List[bytes]:
         """Read (offset, length) extents; each extent is one I/O charged to
         the primary replica node of its first block."""
+        return self.read_extents_ex(path, extents).blobs
+
+    def read_extents_ex(
+        self, path: str, extents: Sequence[Tuple[int, int]]
+    ) -> "ExtentRead":
+        """``read_extents`` plus per-source accounting.  With a cache
+        attached, each extent is first resolved (content-addressed where the
+        dedup index knows the stripe) and looked up; only misses touch a
+        storage node, and missed bytes are admitted for the next job."""
         data = self._files[path]
         refs = self._blocks[path]
-        out = []
+        out: List[bytes] = []
+        storage_b = dram_b = flash_b = 0
         for off, length in extents:
             assert off + length <= len(data), (off, length, len(data))
-            block_idx = off // BLOCK_BYTES
-            node = self.nodes[refs[min(block_idx, len(refs) - 1)].node_ids[0]]
-            node.read(length)
-            self.stats.record(length, node.media)
-            out.append(data[off: off + length])
-        return out
+            if self.cache is None:
+                block_idx = off // BLOCK_BYTES
+                node = self.nodes[refs[min(block_idx, len(refs) - 1)].node_ids[0]]
+                with self._stats_lock:
+                    node.read(length)
+                    self.stats.record(length, node.media)
+                storage_b += length
+                out.append(data[off: off + length])
+                continue
+            # cut the extent at registered stripe boundaries so cache units
+            # are content-addressable even when coalescing spans stripes;
+            # contiguous missed segments merge back into single storage I/Os
+            parts: List[bytes] = []
+            pending_off = pending_len = 0
+
+            def _flush_storage() -> None:
+                nonlocal pending_off, pending_len, storage_b
+                if pending_len == 0:
+                    return
+                block_idx = pending_off // BLOCK_BYTES
+                node = self.nodes[refs[min(block_idx, len(refs) - 1)].node_ids[0]]
+                with self._stats_lock:
+                    node.read(pending_len)
+                    self.stats.record(pending_len, node.media)
+                storage_b += pending_len
+                pending_len = 0
+
+            for seg_off, seg_len in self.cache.dedup.segments(path, off, length):
+                key = self.cache.resolve(path, seg_off, seg_len)
+                # single-flight get: concurrent sessions missing the same
+                # stripe wait for one fill instead of re-reading storage
+                hit = self.cache.get_or_claim(key)
+                if hit is not None:
+                    _flush_storage()
+                    if hit.tier == "dram":
+                        dram_b += seg_len
+                    else:
+                        flash_b += seg_len
+                    parts.append(hit.payload)
+                    continue
+                try:
+                    blob = data[seg_off: seg_off + seg_len]
+                except BaseException:
+                    self.cache.abort(key)
+                    raise
+                self.cache.admit(key, blob)     # also releases the claim
+                parts.append(blob)
+                if pending_len == 0:
+                    pending_off = seg_off
+                pending_len += seg_len
+            _flush_storage()
+            out.append(b"".join(parts))
+        return ExtentRead(
+            blobs=out, storage_bytes=storage_b,
+            dram_bytes=dram_b, flash_bytes=flash_b,
+        )
 
     def read_all(self, path: str) -> bytes:
         return self.read_extents(path, [(0, len(self._files[path]))])[0]

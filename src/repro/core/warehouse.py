@@ -50,6 +50,7 @@ class Table:
         f = dwrf.write_dwrf(batch, opts)
         path = f"warehouse/{self.name}/part-{index:05d}.dwrf"
         self.fs.create(path, f.data)
+        self._register_stripes(path, f.footer, f.data)
         meta = PartitionMeta(
             index=index, path=path, num_rows=batch.num_rows,
             nbytes=f.nbytes, footer=f.footer,
@@ -66,6 +67,20 @@ class Table:
         gen_cfg = gen_cfg or DataGenConfig()
         for p in range(n_partitions):
             self.write_partition(p, generate_partition(self.schema, p, gen_cfg), opts)
+
+    def _register_stripes(
+        self, path: str, footer: dwrf.DwrfFooter, data: bytes
+    ) -> None:
+        """Content-hash every encoded stripe into the attached cache's dedup
+        index so byte-identical stripes across partitions/tables collapse to
+        one cache entry (RecD-style)."""
+        cache = getattr(self.fs, "cache", None)
+        if cache is None:
+            return
+        for st in footer.stripes:
+            cache.dedup.register(
+                path, st.offset, st.length, data[st.offset: st.offset + st.length]
+            )
 
     @property
     def total_bytes(self) -> int:
@@ -95,3 +110,17 @@ class Warehouse:
 
     def table(self, name: str) -> Table:
         return self.tables[name]
+
+    def attach_cache(self, cache) -> None:
+        """Install a shared ``StripeCache`` on this warehouse's filesystem
+        and back-register the stripes of every partition already written, so
+        a cache attached after ingestion still content-dedups old data."""
+        self.fs.attach_cache(cache)
+        for t in self.tables.values():
+            for meta in t.partitions.values():
+                data = self.fs.peek(meta.path)
+                for st in meta.footer.stripes:
+                    cache.dedup.register(
+                        meta.path, st.offset, st.length,
+                        data[st.offset: st.offset + st.length],
+                    )

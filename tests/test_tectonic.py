@@ -47,3 +47,20 @@ def test_replication_and_usage():
     fs = TectonicFS(num_nodes=5)
     fs.create("f", b"z" * 1000)
     assert sum(n.used_bytes for n in fs.nodes) == 3 * 1000
+
+
+def test_append_does_not_double_count_node_usage():
+    # regression: append used to re-place the whole file without releasing
+    # the old blocks, double-counting per-node used_bytes every time
+    fs = TectonicFS(num_nodes=5)
+    fs.create("f", b"a" * 1000)
+    for _ in range(3):
+        fs.append("f", b"b" * 500)
+    assert fs.size("f") == 2500
+    assert sum(n.used_bytes for n in fs.nodes) == 3 * 2500
+    # multi-block files release every block's replicas too
+    big = b"c" * (BLOCK_BYTES + 1000)
+    fs.create("g", big)
+    fs.append("g", b"d" * 100)
+    expected = 3 * (2500 + len(big) + 100)
+    assert sum(n.used_bytes for n in fs.nodes) == expected

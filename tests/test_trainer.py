@@ -7,14 +7,19 @@ from repro.train import Trainer, TrainerConfig
 
 
 def _batches(cfg, n, bs=32, seed=0):
+    # labels are a fixed linear function of the dense features (not random
+    # coin flips), so a fit over a few dozen steps has signal to learn and
+    # the decreasing-loss assertion is deterministic rather than marginal
     rng = np.random.default_rng(seed)
+    w = np.random.default_rng(1234).normal(0, 1, cfg.num_dense).astype(np.float32)
     for _ in range(n):
+        dense = rng.normal(0, 1, (bs, cfg.num_dense)).astype(np.float32)
         yield {
-            "dense": rng.normal(0, 1, (bs, cfg.num_dense)).astype(np.float32),
+            "dense": dense,
             "sparse_ids": rng.integers(0, cfg.vocab_per_table,
                                        (bs, cfg.num_tables, cfg.max_ids_per_feature)).astype(np.int32),
             "sparse_mask": np.ones((bs, cfg.num_tables, cfg.max_ids_per_feature), np.float32),
-            "label": rng.integers(0, 2, bs).astype(np.float32),
+            "label": (dense @ w > 0).astype(np.float32),
         }
 
 
