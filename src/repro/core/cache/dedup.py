@@ -20,7 +20,12 @@ import hashlib
 from typing import Dict, List, Optional, Tuple
 
 # Cache key: ("c", digest, rel_off, length) for content-addressed extents,
-# ("p", path, offset, length) for the path-addressed fallback.
+# ("p", (path, generation), offset, length) for the path-addressed fallback.
+# The generation is bumped on every invalidation (partition rewrite), so a
+# key resolved *before* a rewrite can never collide with one resolved after
+# it — an in-flight reader admitting pre-rewrite bytes under an old-gen key
+# cannot be re-served to post-rewrite readers.  Content keys need no
+# generation: the digest IS the bytes.
 CacheKey = Tuple
 
 
@@ -53,6 +58,7 @@ class DedupIndex:
     def __init__(self):
         self._spans: Dict[str, List[_StripeSpan]] = {}
         self._digest_bytes: Dict[str, int] = {}   # digest -> stripe length
+        self._generation: Dict[str, int] = {}     # path -> rewrite count
         self.stats = DedupStats()
 
     def register(self, path: str, offset: int, length: int, payload: bytes) -> str:
@@ -71,8 +77,14 @@ class DedupIndex:
         return d
 
     def invalidate(self, path: str) -> None:
-        """Drop a path's spans (the file was rewritten, e.g. by append)."""
+        """Drop a path's spans and bump its generation (the file was
+        rewritten, e.g. by append or partition churn): path keys resolved
+        from now on cannot match anything admitted under the old bytes."""
         self._spans.pop(path, None)
+        self._generation[path] = self._generation.get(path, 0) + 1
+
+    def generation(self, path: str) -> int:
+        return self._generation.get(path, 0)
 
     @property
     def unique_stripes(self) -> int:
@@ -84,7 +96,7 @@ class DedupIndex:
         for span in self._spans.get(path, ()):
             if span.offset <= offset and offset + length <= span.offset + span.length:
                 return ("c", span.digest, offset - span.offset, length)
-        return ("p", path, offset, length)
+        return ("p", (path, self._generation.get(path, 0)), offset, length)
 
     def segments(self, path: str, offset: int, length: int) -> List[Tuple[int, int]]:
         """Split [offset, offset+length) along registered stripe boundaries.

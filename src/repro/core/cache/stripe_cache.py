@@ -16,6 +16,19 @@ DRAM/flash hits:
     ``PopularityTracker``), so one-touch scan traffic cannot wash the
     flash tier (the classic cache-pollution failure for training scans).
 
+The tier is **multi-tenant** (ISSUE 3): every lookup/admission carries the
+requesting job's tenant id.  A ``TenantPolicy`` gives each job a
+guaranteed capacity share per tier — eviction prefers victims owned by
+tenants over their guarantee, admission stays unconditional
+(borrow-when-idle) — and per-tenant ``TierStats`` charge hits, bytes,
+admissions, and evictions to the owning job.
+
+Correctness under churn: entries carry an optional TTL, and partition
+rewrites (``TectonicFS.rewrite``/``append``) invalidate the path —
+dropping its path-addressed entries and bumping the ``DedupIndex``
+generation so keys resolved before the rewrite can never be re-served
+after it.
+
 Keys come from ``DedupIndex.resolve`` and are content-addressed where
 possible, so byte-identical stripes across partitions/tables occupy one
 entry (RecD-style dedup).  Per-tier hit/eviction/byte counters plus the
@@ -26,10 +39,12 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from collections import OrderedDict
-from typing import Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 from repro.core.cache.dedup import CacheKey, DedupIndex
+from repro.core.cache.tenancy import TenantPolicy
 from repro.core.popularity import PopularityTracker
 from repro.core.tectonic import IOStats, MediaSpec
 
@@ -40,6 +55,10 @@ DRAM_TIER = MediaSpec(name="dram", seek_ms=0.001, transfer_MBps=20_000.0,
                       capacity_TB=0.000256, power_W=5.0)
 FLASH_TIER = MediaSpec(name="flash", seek_ms=0.02, transfer_MBps=3_500.0,
                        capacity_TB=1.92, power_W=25.0)
+
+# Tenant id used for accounting when a caller does not identify itself,
+# so per-tenant byte sums always equal the tier totals.
+ANON_TENANT = "_anon"
 
 
 def iops_per_watt(num_ios: int, time_s: float, power_W: float) -> float:
@@ -58,8 +77,33 @@ class TierStats:
     admitted: int = 0
     bytes_stored: int = 0
     evictions: int = 0
+    expired: int = 0               # TTL expiries (counted apart from evictions)
     rejected: int = 0              # flash admissions refused (unpopular)
     io: IOStats = dataclasses.field(default_factory=IOStats)
+
+
+@dataclasses.dataclass
+class TenantStats:
+    """Per-job view of the shared tier: reads charged to the reading
+    tenant, storage/evictions charged to the owning (admitting) tenant."""
+
+    tenant: str
+    dram: TierStats = dataclasses.field(default_factory=lambda: TierStats("dram"))
+    flash: TierStats = dataclasses.field(default_factory=lambda: TierStats("flash"))
+    misses: int = 0
+
+    @property
+    def hits(self) -> int:
+        return self.dram.hits + self.flash.hits
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    @property
+    def bytes_stored(self) -> int:
+        return self.dram.bytes_stored + self.flash.bytes_stored
 
 
 @dataclasses.dataclass
@@ -68,8 +112,15 @@ class CacheLookup:
     tier: str                      # "dram" | "flash"
 
 
+@dataclasses.dataclass
+class _Entry:
+    payload: bytes
+    tenant: str                    # owning (admitting) tenant
+    expires: float                 # absolute clock() deadline; inf = no TTL
+
+
 class StripeCache:
-    """Shared, thread-safe, two-tier extent cache for the DPP fleet."""
+    """Shared, thread-safe, two-tier, multi-tenant extent cache."""
 
     def __init__(
         self,
@@ -79,6 +130,9 @@ class StripeCache:
         flash_media: MediaSpec = FLASH_TIER,
         flash_admit_reads: int = 2,
         dedup: Optional[DedupIndex] = None,
+        tenancy: Optional[TenantPolicy] = None,
+        ttl_s: Optional[float] = None,
+        clock: Callable[[], float] = time.monotonic,
     ):
         self.dedup = dedup or DedupIndex()
         self.dram_capacity_bytes = dram_capacity_bytes
@@ -86,10 +140,13 @@ class StripeCache:
         self.dram_media = dram_media
         self.flash_media = flash_media
         self.flash_admit_reads = flash_admit_reads
+        self.tenancy = tenancy or TenantPolicy()
+        self.ttl_s = ttl_s
+        self._clock = clock
         self.popularity = PopularityTracker()
         self._lock = threading.Lock()
-        self._dram: "OrderedDict[CacheKey, bytes]" = OrderedDict()
-        self._flash: "OrderedDict[CacheKey, bytes]" = OrderedDict()
+        self._dram: "OrderedDict[CacheKey, _Entry]" = OrderedDict()
+        self._flash: "OrderedDict[CacheKey, _Entry]" = OrderedDict()
         # (kind, ident) -> stored keys of that stripe/path, for sub-range
         # serving: a narrower projection of an already-cached range hits
         self._groups: Dict[Tuple, set] = {}
@@ -99,6 +156,7 @@ class StripeCache:
         self._inflight: Dict[CacheKey, threading.Event] = {}
         self.dram = TierStats("dram")
         self.flash = TierStats("flash")
+        self.tenants: Dict[str, TenantStats] = {}
         self.misses = 0
 
     # -- key resolution ------------------------------------------------------
@@ -107,17 +165,43 @@ class StripeCache:
         return self.dedup.resolve(path, offset, length)
 
     def invalidate_path(self, path: str) -> None:
-        """The file at ``path`` was rewritten: drop its content mapping and
-        any path-addressed entries (content entries stay valid — they are
-        addressed by the bytes themselves)."""
+        """The file at ``path`` was rewritten: drop its content mapping,
+        bump the path generation (so pre-rewrite keys cannot be re-served),
+        and purge any path-addressed entries (content entries stay valid —
+        they are addressed by the bytes themselves)."""
         with self._lock:
             self.dedup.invalidate(path)
-            for store, stats in ((self._dram, self.dram), (self._flash, self.flash)):
-                stale = [k for k in store if k[0] == "p" and k[1] == path]
+            for store, stats, tier in (
+                (self._dram, self.dram, "dram"), (self._flash, self.flash, "flash")
+            ):
+                stale = [k for k in store if k[0] == "p" and k[1][0] == path]
                 for k in stale:
-                    stats.bytes_stored -= len(store.pop(k))
-                    stats.evictions += 1
+                    e = store.pop(k)
+                    self._charge_removal_locked(stats, tier, e, expired=False)
                     self._note_locked(k)
+
+    # -- per-tenant accounting ----------------------------------------------
+
+    def _tenant(self, tenant: Optional[str]) -> TenantStats:
+        name = tenant if tenant is not None else ANON_TENANT
+        ts = self.tenants.get(name)
+        if ts is None:
+            ts = self.tenants[name] = TenantStats(name)
+        return ts
+
+    def _tenant_tier(self, tenant: Optional[str], tier: str) -> TierStats:
+        return getattr(self._tenant(tenant), tier)
+
+    def _charge_removal_locked(
+        self, stats: TierStats, tier: str, e: _Entry, expired: bool
+    ) -> None:
+        owner = self._tenant_tier(e.tenant, tier)
+        for s in (stats, owner):
+            s.bytes_stored -= len(e.payload)
+            if expired:
+                s.expired += 1
+            else:
+                s.evictions += 1
 
     # -- read path -----------------------------------------------------------
 
@@ -126,16 +210,36 @@ class StripeCache:
         # nbytes against the key's stable integer id
         self.popularity.record_job({hash(key): float(nbytes)})
 
+    def _expired(self, e: _Entry) -> bool:
+        return e.expires <= self._clock()
+
+    def _purge_expired_locked(self, group: Tuple) -> None:
+        """Reclaim expired entries of one stripe/path group (TTL sweep on
+        touch — there is no background reaper thread)."""
+        for k in list(self._groups.get(group, ())):
+            for store, stats, tier in (
+                (self._dram, self.dram, "dram"), (self._flash, self.flash, "flash")
+            ):
+                e = store.get(k)
+                if e is not None and self._expired(e):
+                    store.pop(k)
+                    self._charge_removal_locked(stats, tier, e, expired=True)
+            self._note_locked(k)
+
     def _containing_key_locked(self, key: CacheKey) -> Optional[CacheKey]:
         """A stored key of the same stripe/path whose range covers ``key``'s
-        (the key itself included); DRAM copies preferred."""
+        (the key itself included); DRAM copies preferred.  Expired entries
+        never serve."""
         off, ln = key[2], key[3]
         best = None
         for k in self._groups.get(key[:2], ()):
             if k[2] <= off and off + ln <= k[2] + k[3]:
-                if k in self._dram:
+                e = self._dram.get(k)
+                if e is not None and not self._expired(e):
                     return k
-                best = k
+                e = self._flash.get(k)
+                if e is not None and not self._expired(e):
+                    best = k
         return best
 
     def _note_locked(self, key: CacheKey) -> None:
@@ -150,43 +254,58 @@ class StripeCache:
                 if not s:
                     del self._groups[g]
 
-    def _lookup_locked(self, key: CacheKey) -> Optional[CacheLookup]:
+    def _lookup_locked(
+        self, key: CacheKey, tenant: Optional[str]
+    ) -> Optional[CacheLookup]:
+        if self.ttl_s is not None:
+            self._purge_expired_locked(key[:2])
         k = self._containing_key_locked(key)
         if k is None:
             return None
-        stored = self._dram.get(k)
-        if stored is not None:
+        entry = self._dram.get(k)
+        if entry is not None:
             store, stats, media, tier = (
                 self._dram, self.dram, self.dram_media, "dram"
             )
         else:
-            stored = self._flash[k]
+            entry = self._flash[k]
             store, stats, media, tier = (
                 self._flash, self.flash, self.flash_media, "flash"
             )
+        stored = entry.payload
         payload = (
             stored if k == key
             else stored[key[2] - k[2]: key[2] - k[2] + key[3]]
         )
         store.move_to_end(k)
         self._record_read(key, len(payload))
-        stats.hits += 1
-        stats.bytes_served += len(payload)
+        for s in (stats, self._tenant_tier(tenant, tier)):
+            s.hits += 1
+            s.bytes_served += len(payload)
         stats.io.record(len(payload), media)
         if tier == "flash":
-            # promote the whole entry so the next read is a DRAM hit
-            self._admit_dram_locked(k, stored)
+            # promote the whole entry so the next read is a DRAM hit; the
+            # admitting tenant keeps ownership of the promoted copy
+            self._admit_dram_locked(k, stored, entry.tenant)
         return CacheLookup(payload, tier)
 
-    def get(self, key: CacheKey) -> Optional[CacheLookup]:
+    def _miss_locked(self, key: CacheKey, tenant: Optional[str]) -> None:
+        self.misses += 1
+        self._tenant(tenant).misses += 1
+        self._record_read(key, 0)   # a miss still counts one read
+
+    def get(
+        self, key: CacheKey, tenant: Optional[str] = None
+    ) -> Optional[CacheLookup]:
         with self._lock:
-            hit = self._lookup_locked(key)
+            hit = self._lookup_locked(key, tenant)
             if hit is None:
-                self.misses += 1
-                self._record_read(key, 0)   # a miss still counts one read
+                self._miss_locked(key, tenant)
             return hit
 
-    def get_or_claim(self, key: CacheKey, timeout_s: float = 10.0) -> Optional[CacheLookup]:
+    def get_or_claim(
+        self, key: CacheKey, timeout_s: float = 10.0, tenant: Optional[str] = None
+    ) -> Optional[CacheLookup]:
         """``get`` with single-flight fills: on a cold key the first caller
         claims the fill (returns ``None``; it MUST ``admit`` or ``abort``
         the key), and concurrent callers block until the fill lands, then
@@ -194,32 +313,37 @@ class StripeCache:
         sessions miss it simultaneously."""
         while True:
             with self._lock:
-                hit = self._lookup_locked(key)
+                hit = self._lookup_locked(key, tenant)
                 if hit is not None:
                     return hit
                 ev = self._inflight.get(key)
                 if ev is None:
                     self._inflight[key] = threading.Event()
-                    self.misses += 1
-                    self._record_read(key, 0)
+                    self._miss_locked(key, tenant)
                     return None
             ev.wait(timeout_s)   # filled or aborted; re-check either way
 
     def peek(self, key: CacheKey) -> bool:
-        """Non-mutating membership probe (used by read planning)."""
+        """Non-mutating membership probe (used by read planning and the
+        prefetch planner); an expired entry does not count as present."""
         with self._lock:
             return self._containing_key_locked(key) is not None
 
     # -- admission / eviction ------------------------------------------------
 
-    def admit(self, key: CacheKey, payload: bytes) -> None:
+    def admit(
+        self, key: CacheKey, payload: bytes, tenant: Optional[str] = None
+    ) -> None:
         """Admit a freshly-read extent (and release any single-flight claim
         on it).  Always enters DRAM; DRAM victims spill to flash only if
-        their content has proven popular."""
+        their content has proven popular.  The entry is charged to
+        ``tenant`` until evicted."""
         with self._lock:
+            if self.ttl_s is not None:
+                self._purge_expired_locked(key[:2])
             k = self._containing_key_locked(key)
             if k is None or k == key:
-                self._admit_dram_locked(key, payload)
+                self._admit_dram_locked(key, payload, tenant)
             # else: a wider stored range already serves this key
             self._release_locked(key)
 
@@ -234,22 +358,54 @@ class StripeCache:
         if ev is not None:
             ev.set()
 
-    def _admit_dram_locked(self, key: CacheKey, payload: bytes) -> None:
+    def _expiry(self) -> float:
+        return self._clock() + self.ttl_s if self.ttl_s is not None else float("inf")
+
+    def _pick_victim_locked(
+        self, store: "OrderedDict[CacheKey, _Entry]", tier: str, capacity: int
+    ) -> CacheKey:
+        """LRU among tenants over their guaranteed share; a tenant whose
+        resident bytes fit its guarantee is never evicted by others (the
+        borrow-when-idle flip side: only borrowed bytes are reclaimed)."""
+        if not self.tenancy.shares:
+            return next(iter(store))   # no guarantees: plain O(1) LRU
+        # with shares set, protected entries cluster at the MRU end (they
+        # are the ones being re-read), so this scan normally stops at the
+        # first few LRU entries; worst case is bounded by the protected
+        # tenants' resident entry count
+        for k, e in store.items():   # OrderedDict iterates LRU-first
+            owner = self._tenant_tier(e.tenant, tier)
+            if owner.bytes_stored > self.tenancy.guaranteed_bytes(
+                e.tenant, tier, capacity
+            ):
+                return k
+        return next(iter(store))    # everyone within guarantee: plain LRU
+
+    def _admit_dram_locked(
+        self, key: CacheKey, payload: bytes, tenant: Optional[str]
+    ) -> None:
         if len(payload) > self.dram_capacity_bytes:
-            self._admit_flash_locked(key, payload)
+            self._admit_flash_locked(key, payload, tenant)
             return
         if key in self._dram:
+            # freshly re-read bytes: refresh recency and the TTL deadline
             self._dram.move_to_end(key)
+            self._dram[key].expires = self._expiry()
             return
-        self._dram[key] = payload
-        self.dram.admitted += 1
-        self.dram.bytes_stored += len(payload)
+        self._dram[key] = _Entry(
+            payload, tenant if tenant is not None else ANON_TENANT, self._expiry()
+        )
+        for s in (self.dram, self._tenant_tier(tenant, "dram")):
+            s.admitted += 1
+            s.bytes_stored += len(payload)
         self._note_locked(key)
         while self.dram.bytes_stored > self.dram_capacity_bytes and len(self._dram) > 1:
-            vk, vp = self._dram.popitem(last=False)
-            self.dram.bytes_stored -= len(vp)
-            self.dram.evictions += 1
-            self._admit_flash_locked(vk, vp)
+            vk = self._pick_victim_locked(
+                self._dram, "dram", self.dram_capacity_bytes
+            )
+            ve = self._dram.pop(vk)
+            self._charge_removal_locked(self.dram, "dram", ve, expired=False)
+            self._admit_flash_locked(vk, ve.payload, ve.tenant)
             self._note_locked(vk)
 
     def _is_popular(self, key: CacheKey) -> bool:
@@ -257,23 +413,32 @@ class StripeCache:
             hash(key), 0
         ) >= self.flash_admit_reads
 
-    def _admit_flash_locked(self, key: CacheKey, payload: bytes) -> None:
+    def _admit_flash_locked(
+        self, key: CacheKey, payload: bytes, tenant: Optional[str]
+    ) -> None:
         if key in self._flash:
             self._flash.move_to_end(key)
+            self._flash[key].expires = self._expiry()
             return
         if len(payload) > self.flash_capacity_bytes or not self._is_popular(key):
             self.flash.rejected += 1
+            self._tenant_tier(tenant, "flash").rejected += 1
             return
-        self._flash[key] = payload
-        self.flash.admitted += 1
-        self.flash.bytes_stored += len(payload)
+        self._flash[key] = _Entry(
+            payload, tenant if tenant is not None else ANON_TENANT, self._expiry()
+        )
+        for s in (self.flash, self._tenant_tier(tenant, "flash")):
+            s.admitted += 1
+            s.bytes_stored += len(payload)
         self._note_locked(key)
         # flash admission is a device write: charge it to the tier's I/O model
         self.flash.io.record(len(payload), self.flash_media)
         while self.flash.bytes_stored > self.flash_capacity_bytes and len(self._flash) > 1:
-            vk, vp = self._flash.popitem(last=False)
-            self.flash.bytes_stored -= len(vp)
-            self.flash.evictions += 1
+            vk = self._pick_victim_locked(
+                self._flash, "flash", self.flash_capacity_bytes
+            )
+            ve = self._flash.pop(vk)
+            self._charge_removal_locked(self.flash, "flash", ve, expired=False)
             self._note_locked(vk)
 
     # -- reporting -----------------------------------------------------------
@@ -310,4 +475,22 @@ class StripeCache:
             "flash_bytes_stored": float(self.flash.bytes_stored),
             "dedup_ratio": self.dedup.stats.dedup_ratio,
             "unique_stripes": float(self.dedup.unique_stripes),
+            "expired": float(self.dram.expired + self.flash.expired),
+            "tenants": float(len(self.tenants)),
+        }
+
+    def tenant_summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-job accounting: the attribution view of the shared tier."""
+        return {
+            name: {
+                "hit_rate": ts.hit_rate,
+                "hits": float(ts.hits),
+                "misses": float(ts.misses),
+                "dram_bytes_stored": float(ts.dram.bytes_stored),
+                "flash_bytes_stored": float(ts.flash.bytes_stored),
+                "dram_evictions": float(ts.dram.evictions),
+                "flash_evictions": float(ts.flash.evictions),
+                "bytes_served": float(ts.dram.bytes_served + ts.flash.bytes_served),
+            }
+            for name, ts in self.tenants.items()
         }

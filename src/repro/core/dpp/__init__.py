@@ -2,3 +2,4 @@ from repro.core.dpp.master import DPPMaster, SessionSpec, Split, AutoScaler
 from repro.core.dpp.worker import DPPWorker, WorkerMetrics
 from repro.core.dpp.client import DPPClient
 from repro.core.dpp.service import DPPService, DPPSession
+from repro.core.dpp.prefetch import PrefetchMetrics, PrefetchPlanner

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import zlib
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -30,13 +31,20 @@ class DPPClient:
         client_id: str,
         workers: Sequence,                 # List[DPPWorker]
         fanout: int = 4,                   # partitioned round-robin cap
+        prefetcher=None,                   # optional PrefetchPlanner to poke
     ):
         self.client_id = client_id
         self._all_workers = list(workers)
         self.fanout = fanout
+        self.prefetcher = prefetcher
         self.metrics = ClientMetrics()
         self._rr = 0
-        self._partition_offset = abs(hash(client_id)) % max(len(workers), 1)
+        # stable digest, NOT hash(): str hashing is randomized per process
+        # by PYTHONHASHSEED, which would scramble the client->worker
+        # partitioning across runs/restarts of the same trainer
+        self._partition_offset = (
+            zlib.crc32(client_id.encode()) % max(len(workers), 1)
+        )
 
     def rebind(self, workers: Sequence) -> None:
         """Auto-scaling / worker restarts change the worker set."""
@@ -49,6 +57,11 @@ class DPPClient:
         k = min(self.fanout, len(live))
         start = self._partition_offset % len(live)
         return [live[(start + i) % len(live)] for i in range(k)]
+
+    def _note_stall(self) -> None:
+        if self.prefetcher is not None:
+            # starving trainer: accelerate cache warming immediately
+            self.prefetcher.poke()
 
     def get_batch(
         self, timeout: float = 10.0
@@ -63,6 +76,7 @@ class DPPClient:
             if not mine:
                 time.sleep(0.005)
                 stalled = True
+                self._note_stall()
                 continue
             for i in range(len(mine)):
                 w = mine[(self._rr + i) % len(mine)]
@@ -73,11 +87,15 @@ class DPPClient:
                     self._rr = (self._rr + i + 1) % max(len(mine), 1)
                     self.metrics.batches += 1
                     self.metrics.rx_bytes += sum(a.nbytes for a in batch.values())
+                    # data-stall time (Table 7) accrues ONLY when the
+                    # trainer actually waited; a batch served on the first
+                    # sweep is a zero-stall call, not stall time
                     if stalled:
                         self.metrics.stalls += 1
-                    self.metrics.stall_s += time.perf_counter() - t0
+                        self.metrics.stall_s += time.perf_counter() - t0
                     return batch
             stalled = True
+            self._note_stall()
         self.metrics.stall_s += time.perf_counter() - t0
         self.metrics.stalls += 1
         return None

@@ -139,6 +139,13 @@ class DPPMaster:
             self._leased[sid] = _Lease(worker_id, time.time() + self.lease_s)
             return self._splits[sid]
 
+    def peek_pending(self, n: int) -> List[Split]:
+        """The next ``n`` not-yet-leased splits, in dispatch order — the
+        prefetch planner's window onto upcoming work (read-only: peeking
+        does not lease)."""
+        with self._lock:
+            return [self._splits[sid] for sid in self._pending[:n]]
+
     def complete_split(self, worker_id: str, split_id: int) -> None:
         with self._lock:
             lease = self._leased.pop(split_id, None)

@@ -22,6 +22,7 @@ import numpy as np
 from repro.core.cache import StripeCache
 from repro.core.dpp.client import DPPClient
 from repro.core.dpp.master import AutoScaler, DPPMaster, SessionSpec
+from repro.core.dpp.prefetch import PrefetchPlanner
 from repro.core.dpp.worker import DPPWorker, WorkerMetrics
 from repro.core.warehouse import Table, Warehouse
 
@@ -38,9 +39,15 @@ class DPPSession:
         lease_s: float = 5.0,
         max_workers: int = 16,
         tensor_cache=None,
+        name: str = "session",
+        prefetch: bool = False,
+        prefetch_depth: int = 4,
+        on_stop=None,
     ):
         self.spec = spec
         self.table = table
+        self.name = name                   # tenant id for the stripe cache
+        self._on_stop = on_stop            # e.g. release the tenant's share
         partition_rows = {p: table.partitions[p].num_rows for p in spec.partitions}
         # stripe-aligned splits: the writer emits uniform stripes, so the
         # first stripe's row count is the partition's stripe size
@@ -55,12 +62,22 @@ class DPPSession:
             partition_stripe_rows=partition_stripe_rows,
         )
         self.tensor_cache = tensor_cache
+        # background cache warmer for upcoming splits (ISSUE 3): fetches
+        # only the segments plan_reads reports uncached, off-thread
+        self.prefetcher: Optional[PrefetchPlanner] = (
+            PrefetchPlanner(
+                table, self.master, spec.feature_ids,
+                tenant=name, depth=prefetch_depth,
+            )
+            if prefetch else None
+        )
         self.workers: List[DPPWorker] = []
         self._wid = 0
         for _ in range(n_workers):
             self._launch_worker()
         self.clients = [
-            DPPClient(f"client{i}", self.workers) for i in range(n_clients)
+            DPPClient(f"client{i}", self.workers, prefetcher=self.prefetcher)
+            for i in range(n_clients)
         ]
         self.auto_scale = auto_scale
         self.monitor_interval_s = monitor_interval_s
@@ -75,12 +92,15 @@ class DPPSession:
         w = DPPWorker(
             f"w{self._wid}", self.master, self.table,
             fail_after_splits=fail_after, tensor_cache=self.tensor_cache,
+            tenant=self.name,
         )
         self._wid += 1
         self.workers.append(w)
         return w
 
     def start(self) -> None:
+        if self.prefetcher is not None:
+            self.prefetcher.start()
         for w in self.workers:
             if w._thread is None:
                 w.start()
@@ -89,10 +109,16 @@ class DPPSession:
 
     def stop(self) -> None:
         self._stop.set()
+        if self.prefetcher is not None:
+            self.prefetcher.stop()
         for w in self.workers:
             w.stop()
         for w in self.workers:
             w.join(timeout=2.0)
+        if self.prefetcher is not None:
+            self.prefetcher.join(timeout=2.0)
+        if self._on_stop is not None:
+            self._on_stop()
 
     # -- monitor: health + autoscaling -----------------------------------------
 
@@ -151,7 +177,10 @@ class DPPSession:
         out = []
         deadline = time.time() + timeout_s
         while time.time() < deadline:
-            batch = self.clients[0].get_batch(timeout=1.0)
+            # short poll: the post-exhaustion drain check costs one poll
+            # interval, not a whole client timeout (which would be billed
+            # as trainer stall time and swamp the Table-7 metric)
+            batch = self.clients[0].get_batch(timeout=0.25)
             if batch is not None:
                 out.append(batch)
                 if max_batches and len(out) >= max_batches:
@@ -189,11 +218,41 @@ class DPPService:
         self.tensor_cache = tensor_cache
         self.sessions: Dict[str, DPPSession] = {}
 
-    def create_session(self, name: str, spec: SessionSpec, **kw) -> DPPSession:
-        sess = DPPSession(
-            spec, self.warehouse.table(spec.table),
-            tensor_cache=kw.pop("tensor_cache", self.tensor_cache), **kw,
-        )
+    def create_session(
+        self,
+        name: str,
+        spec: SessionSpec,
+        dram_share: float = 0.0,
+        flash_share: float = 0.0,
+        **kw,
+    ) -> DPPSession:
+        """Register a session; its ``name`` is the cache tenant id.  A
+        non-zero ``dram_share``/``flash_share`` reserves that fraction of
+        the shared tier for this job (borrow-when-idle: unreserved and
+        idle capacity stays usable by everyone).  The reservation lapses
+        automatically when the session stops, so sequential jobs can each
+        claim large shares without exhausting the 1.0 budget and a dead
+        job's resident bytes stop being eviction-protected."""
+        reserve = (dram_share or flash_share) and self.stripe_cache is not None
+        if reserve:
+            # validate the share up front (so an over-committed request
+            # fails before any session machinery spins up) ...
+            self.stripe_cache.tenancy.set_share(name, dram_share, flash_share)
+        try:
+            sess = DPPSession(
+                spec, self.warehouse.table(spec.table), name=name,
+                on_stop=(
+                    (lambda: self.stripe_cache.tenancy.clear_share(name))
+                    if reserve else None
+                ),
+                tensor_cache=kw.pop("tensor_cache", self.tensor_cache), **kw,
+            )
+        except BaseException:
+            if reserve:
+                # ... but never leak the reservation if construction fails:
+                # on_stop only runs for sessions that actually exist
+                self.stripe_cache.tenancy.clear_share(name)
+            raise
         self.sessions[name] = sess
         return sess
 
@@ -231,3 +290,7 @@ class DPPService:
 
     def cache_summary(self) -> Dict[str, float]:
         return self.stripe_cache.summary() if self.stripe_cache else {}
+
+    def tenant_summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-job cache accounting (hits, resident bytes, evictions)."""
+        return self.stripe_cache.tenant_summary() if self.stripe_cache else {}

@@ -40,6 +40,7 @@ class CacheStats:
     bytes_stored: int = 0
     cpu_s_saved: float = 0.0
     evictions: int = 0
+    rejected: int = 0              # inserts larger than the whole cache
 
     @property
     def hit_rate(self) -> float:
@@ -80,6 +81,11 @@ class TensorCache:
         only refresh its LRU recency instead of re-storing equal bytes."""
         nbytes = sum(sum(a.nbytes for a in b.values()) for b in batches)
         with self._lock:
+            if nbytes > self.capacity_bytes:
+                # an oversized insert would evict the entire cache and
+                # still leave bytes_stored > capacity — refuse it instead
+                self.stats.rejected += 1
+                return
             if key in self._data:
                 self._data.move_to_end(key)
                 return

@@ -95,10 +95,12 @@ class DPPWorker:
         fail_after_splits: Optional[int] = None,   # fault-injection hook
         tensor_cache=None,                         # shared TensorCache (§7.5)
         prefetch_stripes: int = 2,                 # extract-ahead depth
+        tenant: Optional[str] = None,              # owning job for cache shares
     ):
         self.worker_id = worker_id
         self.master = master
         self.table = table
+        self.tenant = tenant
         self.spec = master.spec
         self.pipeline = self.spec.pipeline()       # pulled from Master at startup
         self.buffer: "queue.Queue[Dict[str, np.ndarray]]" = queue.Queue(buffer_size)
@@ -127,7 +129,8 @@ class DPPWorker:
 
     def _run(self) -> None:
         reader = TableReader(
-            self.table, list(self.spec.feature_ids), record_popularity=False
+            self.table, list(self.spec.feature_ids), record_popularity=False,
+            tenant=self.tenant,
         )
         while not self._stop.is_set():
             if (
@@ -329,14 +332,19 @@ def _concat_envs(envs: List[Dict[str, Any]]) -> Dict[str, Any]:
 def _concat_labels(
     pending: List[Tuple[Dict[str, Any], Optional[np.ndarray], int]]
 ) -> Optional[np.ndarray]:
-    if all(labels is None for _, labels, _ in pending):
+    has_labels = [labels is not None for _, labels, _ in pending]
+    if not any(has_labels):
         return None
+    if not all(has_labels):
+        # fabricating zeros for the unlabeled stripes would silently
+        # corrupt training targets — a split must be uniformly labeled
+        raise ValueError(
+            "mixed labeled/unlabeled stripes within one split: "
+            f"{sum(has_labels)}/{len(has_labels)} stripes carry labels"
+        )
     if len(pending) == 1:
         return pending[0][1]
-    return np.concatenate([
-        labels if labels is not None else np.zeros(rows, np.float32)
-        for _, labels, rows in pending
-    ])
+    return np.concatenate([labels for _, labels, _ in pending])
 
 
 def _slice_env(env: Dict[str, Any], start: int, stop: int) -> Dict[str, Any]:

@@ -182,11 +182,14 @@ class TableReader:
         feature_ids: Sequence[int],
         coalesce_window: int = COALESCE_WINDOW,
         record_popularity: bool = True,
+        tenant: Optional[str] = None,
     ):
         self.table = table
         self.feature_ids = list(feature_ids)
         self.coalesce_window = coalesce_window
         self.record_popularity = record_popularity
+        # job identity for the stripe cache's per-tenant shares/accounting
+        self.tenant = tenant
         self._job_feature_bytes: Dict[int, float] = {}
 
     def _fetch_streams(
@@ -195,7 +198,9 @@ class TableReader:
         """Execute a plan: fetch extents, slice each wanted stream back out
         of its (possibly merged) extent.  Returns per-stripe raw stream bytes,
         per-feature byte counts, and the cache/storage source accounting."""
-        io = self.table.fs.read_extents_ex(meta.path, plan.extents)
+        io = self.table.fs.read_extents_ex(
+            meta.path, plan.extents, tenant=self.tenant
+        )
         extent_map: List[Tuple[int, bytes]] = [
             (off, blob) for (off, _), blob in zip(plan.extents, io.blobs)
         ]

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -123,9 +124,19 @@ class _BlockRef:
 class TectonicFS:
     """In-memory append-only FS with byte-accurate files + an I/O cost model."""
 
-    def __init__(self, num_nodes: int = 12, media: MediaSpec = HDD, seed: int = 0):
+    def __init__(
+        self,
+        num_nodes: int = 12,
+        media: MediaSpec = HDD,
+        seed: int = 0,
+        io_latency_scale: float = 0.0,
+    ):
         self.nodes = [StorageNode(i, media) for i in range(num_nodes)]
         self.media = media
+        # > 0: storage reads sleep io_time_s * scale, so device latency is
+        # felt in wall-clock (cache hits stay instant) — what makes the
+        # prefetch-overlap benchmark measure real stall reduction
+        self.io_latency_scale = io_latency_scale
         self._files: Dict[str, bytes] = {}
         self._blocks: Dict[str, List[_BlockRef]] = {}
         self._rng = np.random.default_rng(seed)
@@ -134,6 +145,11 @@ class TectonicFS:
         # many sessions' worker threads read one fs: keep the fleet/node
         # accounting consistent (the payload path itself is immutable bytes)
         self._stats_lock = threading.Lock()
+        # serializes file-table mutation (append/rewrite) against the read
+        # path's (data, blocks, generation) snapshot, so a reader never
+        # observes the transient popped state mid-rewrite (RLock: rewrite
+        # and append re-enter through create)
+        self._mutate_lock = threading.RLock()
 
     def attach_cache(self, cache) -> None:
         """Install a shared ``StripeCache``: subsequent ``read_extents``
@@ -143,22 +159,26 @@ class TectonicFS:
     # -- write path ---------------------------------------------------------
 
     def create(self, path: str, data: bytes) -> None:
-        assert path not in self._files, f"append-only: {path} exists"
-        self._files[path] = data
-        refs = []
-        for off in range(0, max(len(data), 1), BLOCK_BYTES):
-            nodes = tuple(
-                int(i) for i in self._rng.choice(len(self.nodes), REPLICATION, replace=False)
-            )
-            refs.append(_BlockRef(node_ids=nodes, data_off=off))
-            for nid in nodes:
-                self.nodes[nid].used_bytes += min(BLOCK_BYTES, len(data) - off)
-        self._blocks[path] = refs
+        with self._mutate_lock:
+            assert path not in self._files, f"append-only: {path} exists"
+            refs = []
+            for off in range(0, max(len(data), 1), BLOCK_BYTES):
+                nodes = tuple(
+                    int(i) for i in self._rng.choice(len(self.nodes), REPLICATION, replace=False)
+                )
+                refs.append(_BlockRef(node_ids=nodes, data_off=off))
+                for nid in nodes:
+                    self.nodes[nid].used_bytes += min(BLOCK_BYTES, len(data) - off)
+            # publish blocks before bytes: a reader snapshots both under
+            # _mutate_lock, so it never sees one without the other
+            self._blocks[path] = refs
+            self._files[path] = data
 
-    def append(self, path: str, data: bytes) -> None:
+    def _release_placement(self, path: str) -> None:
+        """Drop a file's block placement and cached stripes before its
+        bytes change; otherwise per-node used_bytes double-counts and the
+        cache can serve stale data."""
         base = self._files.get(path, b"")
-        # release the old placement before re-creating, otherwise per-node
-        # used_bytes double-counts the existing bytes on every append
         for ref in self._blocks.get(path, ()):
             nbytes = min(BLOCK_BYTES, len(base) - ref.data_off)
             for nid in ref.node_ids:
@@ -167,7 +187,23 @@ class TectonicFS:
         self._blocks.pop(path, None)
         if self.cache is not None:
             self.cache.invalidate_path(path)
-        self.create(path, base + data)
+
+    def append(self, path: str, data: bytes) -> None:
+        with self._mutate_lock:
+            base = self._files.get(path, b"")
+            self._release_placement(path)
+            self.create(path, base + data)
+
+    def rewrite(self, path: str, data: bytes) -> None:
+        """Replace a file's bytes in place (partition churn: the §4
+        feature-engineering pipelines continuously rewrite partitions).
+        Invalidates the path in the attached cache — dropping its
+        path-addressed entries and bumping its dedup generation — before
+        the new bytes land, so no reader can be served the old content."""
+        with self._mutate_lock:
+            assert path in self._files, f"rewrite of non-existent file: {path}"
+            self._release_placement(path)
+            self.create(path, data)
 
     def exists(self, path: str) -> bool:
         return path in self._files
@@ -189,6 +225,10 @@ class TectonicFS:
 
     # -- read path ----------------------------------------------------------
 
+    def _simulate_latency(self, media: MediaSpec, nbytes: int) -> None:
+        if self.io_latency_scale > 0:
+            time.sleep(media.io_time_s(nbytes) * self.io_latency_scale)
+
     def read_extents(
         self, path: str, extents: Sequence[Tuple[int, int]]
     ) -> List[bytes]:
@@ -197,14 +237,26 @@ class TectonicFS:
         return self.read_extents_ex(path, extents).blobs
 
     def read_extents_ex(
-        self, path: str, extents: Sequence[Tuple[int, int]]
+        self,
+        path: str,
+        extents: Sequence[Tuple[int, int]],
+        tenant: Optional[str] = None,
     ) -> "ExtentRead":
         """``read_extents`` plus per-source accounting.  With a cache
         attached, each extent is first resolved (content-addressed where the
         dedup index knows the stripe) and looked up; only misses touch a
-        storage node, and missed bytes are admitted for the next job."""
-        data = self._files[path]
-        refs = self._blocks[path]
+        storage node, and missed bytes are admitted for the next job.
+        ``tenant`` identifies the requesting job for the cache's per-tenant
+        capacity shares and accounting."""
+        with self._mutate_lock:
+            # atomic snapshot vs append/rewrite: bytes, placement, and the
+            # path's dedup generation all belong to one file version
+            data = self._files[path]
+            refs = self._blocks[path]
+            gen0 = (
+                self.cache.dedup.generation(path)
+                if self.cache is not None else 0
+            )
         out: List[bytes] = []
         storage_b = dram_b = flash_b = 0
         for off, length in extents:
@@ -215,6 +267,7 @@ class TectonicFS:
                 with self._stats_lock:
                     node.read(length)
                     self.stats.record(length, node.media)
+                self._simulate_latency(node.media, length)
                 storage_b += length
                 out.append(data[off: off + length])
                 continue
@@ -233,6 +286,7 @@ class TectonicFS:
                 with self._stats_lock:
                     node.read(pending_len)
                     self.stats.record(pending_len, node.media)
+                self._simulate_latency(node.media, pending_len)
                 storage_b += pending_len
                 pending_len = 0
 
@@ -240,7 +294,7 @@ class TectonicFS:
                 key = self.cache.resolve(path, seg_off, seg_len)
                 # single-flight get: concurrent sessions missing the same
                 # stripe wait for one fill instead of re-reading storage
-                hit = self.cache.get_or_claim(key)
+                hit = self.cache.get_or_claim(key, tenant=tenant)
                 if hit is not None:
                     _flush_storage()
                     if hit.tier == "dram":
@@ -254,7 +308,15 @@ class TectonicFS:
                 except BaseException:
                     self.cache.abort(key)
                     raise
-                self.cache.admit(key, blob)     # also releases the claim
+                if self.cache.dedup.generation(path) != gen0:
+                    # a rewrite landed after our snapshot: ``key`` now
+                    # describes the NEW file version while ``blob`` holds
+                    # the old bytes — admitting would poison post-rewrite
+                    # readers.  Serve our (consistent, pre-rewrite) bytes
+                    # but leave the cache alone.
+                    self.cache.abort(key)
+                else:
+                    self.cache.admit(key, blob, tenant=tenant)  # releases claim
                 parts.append(blob)
                 if pending_len == 0:
                     pending_off = seg_off

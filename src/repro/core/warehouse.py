@@ -35,24 +35,52 @@ class Table:
         self.partitions: Dict[int, PartitionMeta] = {}
         self.popularity = PopularityTracker()
 
-    def write_partition(
-        self,
-        index: int,
-        batch: ColumnBatch,
-        opts: Optional[dwrf.DwrfWriterOptions] = None,
-    ) -> PartitionMeta:
+    def _encode(
+        self, batch: ColumnBatch, opts: Optional[dwrf.DwrfWriterOptions]
+    ) -> dwrf.DwrfFile:
         opts = opts or dwrf.DwrfWriterOptions()
         if opts.feature_order is None and self.popularity.total_reads > 0:
             # feature reordering: order streams by recent read popularity
             opts = dataclasses.replace(
                 opts, feature_order=self.popularity.feature_order()
             )
-        f = dwrf.write_dwrf(batch, opts)
+        return dwrf.write_dwrf(batch, opts)
+
+    def write_partition(
+        self,
+        index: int,
+        batch: ColumnBatch,
+        opts: Optional[dwrf.DwrfWriterOptions] = None,
+    ) -> PartitionMeta:
+        f = self._encode(batch, opts)
         path = f"warehouse/{self.name}/part-{index:05d}.dwrf"
         self.fs.create(path, f.data)
         self._register_stripes(path, f.footer, f.data)
         meta = PartitionMeta(
             index=index, path=path, num_rows=batch.num_rows,
+            nbytes=f.nbytes, footer=f.footer,
+        )
+        self.partitions[index] = meta
+        return meta
+
+    def rewrite_partition(
+        self,
+        index: int,
+        batch: ColumnBatch,
+        opts: Optional[dwrf.DwrfWriterOptions] = None,
+    ) -> PartitionMeta:
+        """Replace an existing partition's bytes (continuous feature
+        engineering, §4).  ``TectonicFS.rewrite`` invalidates the attached
+        cache's path entries and bumps the dedup generation *before* the
+        new bytes land; the new stripes are then re-registered, so readers
+        switch to the new content atomically and are never served a stale
+        cached stripe."""
+        old = self.partitions[index]
+        f = self._encode(batch, opts)
+        self.fs.rewrite(old.path, f.data)
+        self._register_stripes(old.path, f.footer, f.data)
+        meta = PartitionMeta(
+            index=index, path=old.path, num_rows=batch.num_rows,
             nbytes=f.nbytes, footer=f.footer,
         )
         self.partitions[index] = meta

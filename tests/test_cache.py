@@ -9,7 +9,13 @@ import numpy as np
 import pytest
 
 from repro.core import dwrf
-from repro.core.cache import DedupIndex, StripeCache, stripe_digest
+from repro.core.cache import (
+    DedupIndex,
+    StripeCache,
+    TenantPolicy,
+    TenantShare,
+    stripe_digest,
+)
 from repro.core.datagen import DataGenConfig, generate_partition
 from repro.core.dpp import DPPService, SessionSpec
 from repro.core.dpp.tensor_cache import TensorCache
@@ -56,9 +62,12 @@ def test_dedup_index_resolves_content_keys():
     assert d == stripe_digest(payload)
     # sub-extent inside the stripe -> content key with relative offset
     assert idx.resolve("p1", 10, 20) == ("c", d, 6, 20)
-    # crossing the stripe boundary -> path-addressed fallback
-    assert idx.resolve("p1", 50, 100) == ("p", "p1", 50, 100)
-    assert idx.resolve("other", 10, 20) == ("p", "other", 10, 20)
+    # crossing the stripe boundary -> path-addressed (generation-scoped)
+    assert idx.resolve("p1", 50, 100) == ("p", ("p1", 0), 50, 100)
+    assert idx.resolve("other", 10, 20) == ("p", ("other", 0), 10, 20)
+    # a rewrite bumps the generation: pre-rewrite keys can never match
+    idx.invalidate("p1")
+    assert idx.resolve("p1", 50, 100) == ("p", ("p1", 1), 50, 100)
 
 
 def test_dedup_collapses_identical_stripes_across_partitions():
@@ -201,6 +210,245 @@ def test_single_flight_coalesces_concurrent_misses():
     assert cache.misses == 1 and cache.dram.hits == 1
 
 
+# -- invalidation under churn (ISSUE 3) --------------------------------------
+
+
+def test_rewrite_then_read_returns_new_bytes():
+    wh, t = _warehouse()
+    cache = StripeCache()
+    wh.attach_cache(cache)
+    proj = t.schema.logged_ids[:8]
+    opts = dwrf.DwrfWriterOptions(flattened=True, stripe_rows=STRIPE)
+    r = TableReader(t, proj, record_popularity=False)
+    old = r.read_rows(t.partitions[0], 0, ROWS)
+    warm = r.read_rows(t.partitions[0], 0, ROWS)
+    assert warm.bytes_from_cache == warm.bytes_read   # fully cached
+
+    new_batch = generate_partition(
+        t.schema, 0, DataGenConfig(rows_per_partition=ROWS, seed=99)
+    )
+    t.rewrite_partition(0, new_batch, opts)
+
+    # reference: the same new batch served by a cache-less warehouse
+    wh2 = Warehouse()
+    t2 = wh2.create_table(t.schema)
+    t2.write_partition(0, new_batch, opts)
+    ref = TableReader(t2, proj, record_popularity=False).read_rows(
+        t2.partitions[0], 0, ROWS
+    )
+
+    fresh = r.read_rows(t.partitions[0], 0, ROWS)
+    assert fresh.bytes_from_cache == 0                # nothing stale served
+    _assert_batches_identical(fresh.batch, ref.batch)
+    again = r.read_rows(t.partitions[0], 0, ROWS)     # and the new bytes cache
+    assert again.bytes_from_cache == again.bytes_read
+    _assert_batches_identical(again.batch, ref.batch)
+
+
+def test_generation_prevents_stale_admit_after_rewrite():
+    # an in-flight reader that resolved its key BEFORE a rewrite and admits
+    # the old bytes AFTER it must not poison post-rewrite readers
+    cache = StripeCache()
+    key_old = cache.resolve("f", 0, 4)
+    cache.invalidate_path("f")            # the rewrite lands mid-read
+    cache.admit(key_old, b"OLD!")         # stale late admit
+    key_new = cache.resolve("f", 0, 4)
+    assert key_new != key_old
+    assert cache.get(key_new) is None     # old bytes unreachable
+
+
+def test_rewrite_racing_inflight_read_never_poisons_cache():
+    # a rewrite landing in the middle of read_extents_ex must not let the
+    # in-flight reader admit its pre-rewrite snapshot bytes under keys
+    # that describe the NEW file version
+    wh, t = _warehouse()
+    cache = StripeCache()
+    wh.attach_cache(cache)
+    proj = t.schema.logged_ids[:8]
+    opts = dwrf.DwrfWriterOptions(flattened=True, stripe_rows=STRIPE)
+    new_batch = generate_partition(
+        t.schema, 0, DataGenConfig(rows_per_partition=ROWS, seed=77)
+    )
+    r = TableReader(t, proj, record_popularity=False)
+    old_meta = t.partitions[0]
+
+    orig_segments = cache.dedup.segments
+    fired = []
+
+    def seg_hook(path, off, ln):
+        if not fired and path == old_meta.path:
+            fired.append(1)
+            t.rewrite_partition(0, new_batch, opts)   # lands mid-read
+        return orig_segments(path, off, ln)
+
+    # iter_stripes calls segments only inside read_extents_ex — i.e. AFTER
+    # the (data, generation) snapshot — which is exactly the racing window
+    cache.dedup.segments = seg_hook
+    try:
+        sr = next(iter(r.iter_stripes(old_meta, 0, STRIPE)))
+    finally:
+        cache.dedup.segments = orig_segments
+    assert fired
+    assert sr.bytes_from_storage == sr.bytes_read   # old bytes, not cache
+
+    wh2 = Warehouse()
+    t2 = wh2.create_table(t.schema)
+    t2.write_partition(0, new_batch, opts)
+    ref = TableReader(t2, proj, record_popularity=False).read_rows(
+        t2.partitions[0], 0, ROWS
+    )
+    post = r.read_rows(t.partitions[0], 0, ROWS)
+    _assert_batches_identical(post.batch, ref.batch)   # never the old bytes
+    again = r.read_rows(t.partitions[0], 0, ROWS)
+    _assert_batches_identical(again.batch, ref.batch)
+
+
+def test_inflight_read_admit_checks_generation():
+    # the precise poisoning interleaving: reader snapshots OLD bytes, a
+    # same-geometry rewrite + re-registration lands before the reader
+    # resolves its keys, so resolve() describes the NEW content — the
+    # reader must NOT admit its old snapshot under that key
+    fs = TectonicFS()
+    cache = StripeCache()
+    fs.attach_cache(cache)
+    old, new = b"A" * 100, b"B" * 100
+    fs.create("f", old)
+    cache.dedup.register("f", 0, 100, old)
+
+    orig_segments = cache.dedup.segments
+    fired = []
+
+    def seg_hook(path, off, ln):
+        out = orig_segments(path, off, ln)
+        if not fired:
+            fired.append(1)
+            fs.rewrite("f", new)                     # invalidates + bumps gen
+            cache.dedup.register("f", 0, 100, new)   # same span geometry
+        return out
+
+    cache.dedup.segments = seg_hook
+    try:
+        racing = fs.read_extents_ex("f", [(0, 100)])
+    finally:
+        cache.dedup.segments = orig_segments
+    assert racing.blobs == [old]          # the pre-rewrite reader gets old bytes
+    assert fs.read_all("f") == new        # ...but nobody after it ever does
+    assert fs.read_all("f") == new        # (and the cached copy is the new one)
+
+
+def test_ttl_expiry_evicts():
+    now = [0.0]
+    cache = StripeCache(ttl_s=5.0, clock=lambda: now[0])
+    key = cache.resolve("f", 0, 4)
+    cache.admit(key, b"data")
+    assert cache.get(key) is not None
+    now[0] = 5.1
+    assert cache.get(key) is None         # expired, not served
+    assert cache.dram.expired == 1
+    assert cache.dram.bytes_stored == 0   # storage reclaimed
+    cache.admit(key, b"data")             # a fresh fill restarts the clock
+    assert cache.get(key) is not None
+
+
+# -- tenancy (ISSUE 3) -------------------------------------------------------
+
+
+def test_tenant_shares_protect_working_set_from_antagonist():
+    policy = TenantPolicy({"vip": TenantShare(dram_frac=0.6)})
+    cache = StripeCache(dram_capacity_bytes=1000, tenancy=policy,
+                        flash_admit_reads=10**9)      # DRAM-only
+    vip_keys = [("p", (f"v{i}", 0), 0, 100) for i in range(5)]   # 500 B set
+    for k in vip_keys:
+        cache.admit(k, b"x" * 100, tenant="vip")
+    # antagonist streams 30 one-touch entries through the tier
+    for i in range(30):
+        cache.admit(("p", (f"a{i}", 0), 0, 100), b"y" * 100, tenant="scan")
+    # vip's resident set (within its 600 B guarantee) survived untouched
+    for k in vip_keys:
+        assert cache.get(k, tenant="vip") is not None
+    assert cache.tenants["vip"].dram.evictions == 0
+    assert cache.tenants["scan"].dram.evictions > 0
+    # and the antagonist could still use the rest of the tier
+    assert cache.tenants["scan"].dram.bytes_stored > 0
+
+
+def test_borrow_when_idle_lets_lone_tenant_use_whole_tier():
+    policy = TenantPolicy({"vip": TenantShare(dram_frac=0.3)})
+    cache = StripeCache(dram_capacity_bytes=1000, tenancy=policy,
+                        flash_admit_reads=10**9)
+    for i in range(10):                   # 1000 B: far over the 300 B share
+        cache.admit(("p", (f"v{i}", 0), 0, 100), b"x" * 100, tenant="vip")
+    assert cache.tenants["vip"].dram.bytes_stored == 1000
+    assert cache.dram.evictions == 0      # no one to give space back to
+
+
+def test_tenant_byte_accounting_sums_to_tier_totals():
+    wh, t = _warehouse(n_partitions=3)
+    probe = TableReader(t, t.schema.logged_ids[:8], record_popularity=False)
+    stripe_bytes = next(iter(probe.iter_stripes(t.partitions[0], 0, STRIPE))).bytes_read
+    cache = StripeCache(dram_capacity_bytes=int(2.5 * stripe_bytes),
+                        flash_admit_reads=2,
+                        tenancy=TenantPolicy({"a": TenantShare(0.4, 0.4)}))
+    wh.attach_cache(cache)
+    ra = TableReader(t, t.schema.logged_ids[:8], record_popularity=False, tenant="a")
+    rb = TableReader(t, t.schema.logged_ids[:8], record_popularity=False, tenant="b")
+    for _ in range(2):
+        for p in range(3):
+            list(ra.iter_stripes(t.partitions[p], 0, ROWS))
+            list(rb.iter_stripes(t.partitions[p], 0, ROWS))
+    assert cache.dram.evictions > 0       # tier was contended
+    for tier in ("dram", "flash"):
+        for field in ("bytes_stored", "admitted", "evictions", "hits",
+                      "bytes_served", "expired", "rejected"):
+            total = getattr(getattr(cache, tier), field)
+            by_tenant = sum(
+                getattr(getattr(ts, tier), field) for ts in cache.tenants.values()
+            )
+            assert by_tenant == total, (tier, field, by_tenant, total)
+    assert sum(ts.misses for ts in cache.tenants.values()) == cache.misses
+
+
+def test_tenant_share_sum_validated():
+    policy = TenantPolicy()
+    policy.set_share("a", dram_frac=0.7)
+    with pytest.raises(ValueError):
+        policy.set_share("b", dram_frac=0.5)
+    policy.set_share("b", dram_frac=0.3)          # exactly 1.0 is fine
+    policy.set_share("a", dram_frac=0.6)          # re-registering replaces
+    # the constructor path validates too — no bypass via the shares dict
+    with pytest.raises(ValueError):
+        TenantPolicy({"a": TenantShare(dram_frac=0.9),
+                      "b": TenantShare(dram_frac=0.9)})
+    # releasing a share frees its budget for the next job
+    policy.clear_share("a")
+    policy.set_share("c", dram_frac=0.7)
+
+
+def test_session_share_released_on_stop():
+    from repro.core.dpp import DPPService
+
+    s = make_schema("shr", 16, 4, seed=2)
+    wh = Warehouse()
+    t = wh.create_table(s)
+    t.generate(1, DataGenConfig(rows_per_partition=ROWS, seed=4),
+               dwrf.DwrfWriterOptions(flattened=True, stripe_rows=STRIPE))
+    svc = DPPService(wh)
+    # two sequential jobs may each reserve 0.6: the first share lapses
+    # with its session instead of permanently exhausting the 1.0 budget
+    for name in ("j1", "j2"):
+        sess = svc.create_session(name, _spec(t), n_workers=1, dram_share=0.6)
+        sess.run_to_completion(timeout_s=60)
+        assert name not in svc.stripe_cache.tenancy.shares
+    # a failed construction must not leak its reservation either
+    import dataclasses as _dc
+
+    bad = _dc.replace(_spec(t), partitions=(0, 99))    # partition 99 missing
+    with pytest.raises(KeyError):
+        svc.create_session("j3", bad, n_workers=1, dram_share=0.6)
+    assert "j3" not in svc.stripe_cache.tenancy.shares
+    svc.create_session("j4", _spec(t), n_workers=1, dram_share=0.6)
+
+
 # -- cross-job behavior ------------------------------------------------------
 
 
@@ -278,6 +526,16 @@ def test_hit_rate_rises_with_zipf_skew():
 
 
 # -- tensor cache satellite --------------------------------------------------
+
+
+def test_tensor_cache_rejects_oversized_insert():
+    tc = TensorCache(capacity_bytes=1000)
+    tc.put(("small",), [{"x": np.zeros(100, np.float32)}], cpu_s=0.1)   # 400 B
+    tc.put(("big",), [{"x": np.zeros(1000, np.float32)}], cpu_s=0.1)   # 4000 B
+    assert tc.get(("big",)) is None          # rejected, not stored
+    assert tc.stats.rejected == 1
+    assert tc.get(("small",)) is not None    # and nothing was evicted for it
+    assert tc.stats.bytes_stored == 400 <= tc.capacity_bytes
 
 
 def test_tensor_cache_put_refreshes_lru_on_insert_hit():

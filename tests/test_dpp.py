@@ -119,3 +119,133 @@ def test_autoscaling_session_scales_out():
     batches = sess.run_to_completion(timeout_s=90)
     total_rows = sum(b["label"].shape[0] for b in batches)
     assert total_rows == 2 * 2048
+
+
+# -- client satellites (ISSUE 3) ---------------------------------------------
+
+
+class _StubWorker:
+    """Just enough of DPPWorker's serving surface for client unit tests."""
+
+    def __init__(self, batches=()):
+        self.alive = True
+        self._q = list(batches)
+
+    @property
+    def buffered(self):
+        return len(self._q)
+
+    def get_batch(self, timeout=0.0):
+        return self._q.pop(0) if self._q else None
+
+
+def test_client_partition_offset_is_stable_digest():
+    import zlib
+
+    from repro.core.dpp import DPPClient
+
+    workers = [_StubWorker() for _ in range(8)]
+    c = DPPClient("trainer-3", workers)
+    # crc32, not hash(): identical across processes whatever PYTHONHASHSEED
+    assert c._partition_offset == zlib.crc32(b"trainer-3") % 8
+
+
+def test_client_stall_accounting_only_on_actual_stall():
+    from repro.core.dpp import DPPClient
+
+    w = _StubWorker([{"x": np.zeros(4, np.float32)}])
+    c = DPPClient("c0", [w])
+    assert c.get_batch(timeout=1.0) is not None
+    # batch was available immediately: NO stall time may accrue
+    assert c.metrics.stalls == 0
+    assert c.metrics.stall_s == 0.0
+    # now the buffer is empty and the worker produces nothing
+    t0 = time.perf_counter()
+    assert c.get_batch(timeout=0.05) is None
+    waited = time.perf_counter() - t0
+    assert c.metrics.stalls == 1
+    assert 0.0 < c.metrics.stall_s <= waited + 0.01
+
+
+def test_concat_labels_raises_on_mixed_labeling():
+    from repro.core.dpp.worker import _concat_labels
+
+    labeled = ({}, np.ones(4, np.float32), 4)
+    unlabeled = ({}, None, 4)
+    assert _concat_labels([unlabeled, unlabeled]) is None
+    np.testing.assert_array_equal(
+        _concat_labels([labeled, labeled]), np.ones(8, np.float32)
+    )
+    with pytest.raises(ValueError, match="mixed labeled/unlabeled"):
+        _concat_labels([labeled, unlabeled])
+
+
+# -- prefetch planner (ISSUE 3) ----------------------------------------------
+
+
+def test_prefetch_planner_warms_only_uncached_segments():
+    from repro.core.cache import StripeCache
+    from repro.core.dpp import DPPMaster, PrefetchPlanner
+
+    s = make_schema("pf", 20, 6, seed=0)
+    wh = Warehouse()
+    t = wh.create_table(s)
+    t.generate(2, DataGenConfig(rows_per_partition=1024, seed=1),
+               dwrf.DwrfWriterOptions(flattened=True, stripe_rows=256))
+    cache = StripeCache()
+    wh.attach_cache(cache)
+    spec = _spec(t)
+    rows = {p: t.partitions[p].num_rows for p in spec.partitions}
+    m = DPPMaster(spec, rows, partition_stripe_rows={p: 256 for p in spec.partitions})
+
+    planner = PrefetchPlanner(t, m, spec.feature_ids, tenant="job", depth=32)
+    fetched = planner.prefetch_once()
+    assert fetched > 0
+    assert planner.metrics.splits_warmed > 0
+    # everything upcoming is now cached: a second pass fetches nothing
+    planner2 = PrefetchPlanner(t, m, spec.feature_ids, tenant="job", depth=32)
+    assert planner2.prefetch_once() == 0
+    assert planner2.metrics.bytes_already_cached > 0
+    # and the worker read path is served from the cache, byte-identical
+    from repro.core.reader import TableReader
+
+    r = TableReader(t, spec.feature_ids, record_popularity=False, tenant="job")
+    res = r.read_rows(t.partitions[0], 0, 256)
+    assert res.bytes_from_storage == 0
+    assert res.bytes_from_cache == res.bytes_read
+    # prefetched bytes are charged to the prefetching tenant
+    assert cache.tenants["job"].bytes_stored > 0
+    # a partition rewrite bumps the generation: its splits become warmable
+    # again instead of being skipped forever on stale cached bytes
+    from repro.core.datagen import generate_partition
+
+    t.rewrite_partition(
+        0, generate_partition(s, 0, DataGenConfig(rows_per_partition=1024, seed=9)),
+        dwrf.DwrfWriterOptions(flattened=True, stripe_rows=256),
+    )
+    assert planner2.prefetch_once() > 0
+
+
+def test_session_with_prefetch_serves_identical_batches():
+    from repro.core.cache import StripeCache
+    from repro.core.dpp import DPPService
+
+    wh, batches_ref = None, None
+    results = {}
+    for prefetch in (False, True):
+        s = make_schema("pfs", 20, 6, seed=0)
+        wh = Warehouse()
+        t = wh.create_table(s)
+        t.generate(2, DataGenConfig(rows_per_partition=1024, seed=1),
+                   dwrf.DwrfWriterOptions(flattened=True, stripe_rows=256))
+        svc = DPPService(wh, stripe_cache=StripeCache())
+        sess = svc.create_session("j", _spec(t), n_workers=2, prefetch=prefetch)
+        out = sess.run_to_completion(timeout_s=60)
+        results[prefetch] = sorted(
+            float(np.nan_to_num(b["dense"]).sum()) for b in out
+        )
+        total = sum(b["label"].shape[0] for b in out)
+        assert total == 2 * 1024
+        if prefetch:
+            assert sess.prefetcher.metrics.plans > 0
+    assert results[False] == pytest.approx(results[True])
