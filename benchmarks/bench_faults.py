@@ -1,0 +1,216 @@
+"""Fault-tolerant, load-adaptive DPP control plane (ISSUE 4; §3.2.1 under
+failures + InTune-style feedback scaling).
+
+Three demonstrations, matching the acceptance criteria:
+
+  (a) **poisoned split, no livelock** — a partition with mixed
+      labeled/unlabeled stripes deterministically kills extract/transform
+      on any worker.  With per-split dispatch budgets the session
+      terminates within ``dispatch_budget x lease_s`` wall-clock in a
+      ``DEGRADED`` state that surfaces the mixed-labels exception
+      chain, while every healthy split's batches are still delivered
+      (drain mode).  The pre-ISSUE-4 Master would re-dispatch the split
+      on every lease expiry, forever.
+  (b) **worker-kill recovery** — kill N of M workers mid-session; the
+      control plane (health restarts + stall-driven elastic scale-up)
+      recovers >= 0.8x the pre-kill batch throughput and the epoch
+      completes exactly.
+  (c) **stall-driven scale-up** — on an IO-latency-simulated warehouse, a
+      1-worker session with the ``ElasticController`` enabled cuts client
+      ``stall_s`` versus the same session pinned at 1 worker, by growing
+      the fleet (and prefetch depth) only after sustained stall pressure.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.core import dwrf
+from repro.core.datagen import DataGenConfig, generate_partition
+from repro.core.dpp import DPPSession, SessionSpec, SessionState
+from repro.core.schema import make_schema
+from repro.core.tectonic import TectonicFS
+from repro.core.transforms import default_dlrm_pipeline
+from repro.core.warehouse import Table, Warehouse
+
+STRIPE = 256
+
+
+def _table(name: str, n_parts: int, rows: int, latency: float = 0.0) -> Table:
+    s = make_schema(name, 20, 6, seed=0)
+    wh = Warehouse(TectonicFS(io_latency_scale=latency))
+    t = wh.create_table(s)
+    t.generate(n_parts, DataGenConfig(rows_per_partition=rows, seed=1),
+               dwrf.DwrfWriterOptions(flattened=True, stripe_rows=STRIPE))
+    return t
+
+
+def _poison_partition(t: Table, index: int, rows: int) -> None:
+    """Install partition ``index`` with mixed labeled/unlabeled stripes: a
+    labeled head (the streaming join delivered labels) concatenated with
+    an unlabeled tail (labels not yet arrived) — the §4 ingestion hazard
+    that the worker's per-split label-uniformity check deterministically
+    rejects."""
+    opts = dwrf.DwrfWriterOptions(flattened=True, stripe_rows=STRIPE)
+    head = dwrf.write_dwrf(
+        generate_partition(t.schema, index,
+                           DataGenConfig(rows_per_partition=STRIPE, seed=7)),
+        opts,
+    )
+    tail = dwrf.write_dwrf(
+        generate_partition(
+            t.schema, index,
+            DataGenConfig(rows_per_partition=rows - STRIPE, seed=8,
+                          labeled=False),
+        ),
+        opts,
+    )
+    t.write_partition_encoded(index, dwrf.concat_dwrf([head, tail]))
+
+
+def _spec(t: Table, **kw) -> SessionSpec:
+    dense = t.schema.dense_ids[:6]
+    sparse = t.schema.sparse_ids[:3]
+    pipe = default_dlrm_pipeline(dense, sparse, hash_size=500)
+    d = dict(
+        table=t.schema.name, partitions=tuple(t.partitions),
+        feature_ids=tuple(pipe.required_features()),
+        transform_specs=tuple(pipe.specs),
+        batch_size=256, rows_per_split=256,
+        dense_keys=tuple(f"d{f}" for f in dense),
+        sparse_keys=tuple(f"s{f}" for f in sparse),
+        max_ids_per_feature=8,
+    )
+    d.update(kw)
+    return SessionSpec(**d)
+
+
+# -- (a) poisoned split: bounded termination + DEGRADED drain ----------------
+
+
+def _poisoned_split(rows: int) -> None:
+    budget, lease_s = 2, 2.0
+    n_parts = 4
+    t = _table("bf_poison", n_parts - 1, rows)
+    _poison_partition(t, n_parts - 1, rows)
+    sess = DPPSession(
+        _spec(t, batch_size=rows // 2, rows_per_split=rows), t,
+        n_workers=2, lease_s=lease_s, dispatch_budget=budget,
+    )
+    t0 = time.time()
+    batches = sess.run_to_completion(timeout_s=60)
+    elapsed = time.time() - t0
+    healthy_rows = sum(b["label"].shape[0] for b in batches)
+    failures = sess.failure_report()
+    emit(
+        "faults.poisoned_split", elapsed * 1e6,
+        f"state={sess.state} budget_x_lease_s={budget * lease_s:.1f} "
+        f"elapsed_s={elapsed:.2f} quarantined={len(failures)} "
+        f"healthy_rows={healthy_rows}",
+    )
+    assert elapsed <= budget * lease_s, (
+        f"poisoned session must terminate within budget x lease: "
+        f"{elapsed:.2f}s > {budget * lease_s:.2f}s (livelock?)"
+    )
+    assert sess.state == SessionState.DEGRADED, sess.state
+    assert healthy_rows == (n_parts - 1) * rows, healthy_rows
+    [f] = failures
+    assert f.dispatches == budget and "mixed labeled/unlabeled" in f.last_error, (
+        f.dispatches, f.last_error[-200:],
+    )
+    assert all(s == "data_error" for s in f.statuses), f.statuses
+
+
+# -- (b) kill N of M workers: throughput recovery ----------------------------
+
+
+def _worker_kill(rows: int) -> None:
+    n_parts, n_workers, n_kill = 8, 4, 2
+    t = _table("bf_kill", n_parts, rows, latency=2.0)
+    sess = DPPSession(
+        _spec(t), t, n_workers=n_workers, auto_scale=True,
+        monitor_interval_s=0.1, lease_s=2.0, max_workers=8,
+    )
+    victims = sess.workers[:n_kill]
+    for w in victims:
+        w.fail_after_splits = 2      # die mid-session
+    sess.start()
+    stamps = []
+    t_dead = None                    # when the last victim actually died
+    t0 = time.time()
+    deadline = t0 + 120
+    try:
+        while time.time() < deadline:
+            if t_dead is None and all(not w.alive for w in victims):
+                t_dead = time.time() - t0
+            b = sess.clients[0].get_batch(timeout=0.25)
+            if b is not None:
+                stamps.append(time.time() - t0)
+                continue
+            if sess.master.finished and all(w.buffered == 0 for w in sess.workers):
+                break
+    finally:
+        sess.stop()
+    n = len(stamps)
+    # event-anchored windows (batch-count windows are racy against the
+    # kill timing): pre-kill rate over everything delivered before the
+    # victims died; recovered rate over the last quarter of the epoch,
+    # well past the restarts/scale-up.
+    assert t_dead is not None, "victims never died"
+    pre_n = sum(1 for s in stamps if s <= t_dead)
+    pre = pre_n / t_dead if pre_n else 0.0
+    k = max(4, n // 4)
+    post = k / max(stamps[-1] - stamps[-k - 1], 1e-9)
+    ratio = post / pre if pre > 0 else float("inf")
+    emit(
+        "faults.worker_kill_recovery", stamps[-1] * 1e6,
+        f"state={sess.state} batches={n} restarts={len(sess.restart_events)} "
+        f"scale_ups={sum(1 for e in sess.scale_events if e['delta'] > 0)} "
+        f"t_dead_s={t_dead:.2f} pre_tput={pre:.1f} post_tput={post:.1f} "
+        f"recovery={ratio:.2f}x",
+    )
+    assert sess.state == SessionState.COMPLETED, sess.state
+    assert n == n_parts * rows // 256, n            # exact epoch despite kills
+    assert len(sess.restart_events) >= n_kill, sess.restart_events
+    assert ratio >= 0.8, (
+        f"throughput must recover to >=0.8x pre-kill: {ratio:.2f}x"
+    )
+
+
+# -- (c) stall-driven elastic scale-up vs fixed fleet ------------------------
+
+
+def _stall_scaleup(rows: int) -> None:
+    def _run(elastic: bool) -> DPPSession:
+        t = _table("bf_scale", 4, rows, latency=4.0)
+        sess = DPPSession(
+            _spec(t), t, n_workers=1, auto_scale=elastic,
+            monitor_interval_s=0.05, lease_s=5.0, max_workers=8,
+        )
+        out = sess.run_to_completion(timeout_s=120)
+        assert sum(b["label"].shape[0] for b in out) == 4 * rows
+        return sess
+
+    fixed = _run(elastic=False)
+    scaled = _run(elastic=True)
+    f_stall = fixed.clients[0].metrics.stall_s
+    s_stall = scaled.clients[0].metrics.stall_s
+    emit(
+        "faults.stall_driven_scaleup", 0.0,
+        f"fixed_stall_s={f_stall:.2f} elastic_stall_s={s_stall:.2f} "
+        f"cut={s_stall / max(f_stall, 1e-9):.2f}x "
+        f"workers_final={len(scaled.workers)} "
+        f"scale_events={len(scaled.scale_events)}",
+    )
+    assert len(scaled.scale_events) >= 1, "controller never acted"
+    assert len(scaled.workers) > 1, "fleet never grew"
+    assert s_stall < f_stall, (
+        f"elastic fleet must cut stall time: {s_stall:.2f}s vs {f_stall:.2f}s"
+    )
+
+
+def run(quick: bool = False) -> None:
+    rows = 1024 if quick else 2048
+    _poisoned_split(rows)
+    _worker_kill(rows)
+    _stall_scaleup(rows)

@@ -20,6 +20,7 @@ SECTIONS = [
     "reader",           # split-scoped streaming reads (ISSUE 1)
     "cache",            # shared stripe cache + dedup tier (ISSUE 2)
     "tenancy",          # multi-tenant cache control plane + prefetch (ISSUE 3)
+    "faults",           # dispatch budgets, quarantine, elastic scaling (ISSUE 4)
     "popularity",       # Fig 7
     "dpp",              # Table 9 / Fig 9 / Table 10
     "trainer",          # Table 8 / Fig 8 / Table 7

@@ -1,0 +1,92 @@
+#!/usr/bin/env python
+"""Doc-drift gate: every repo path and `python -m` command the docs
+mention must actually exist.
+
+Scans README.md and docs/*.md for
+
+  * `src/repro/...`, `benchmarks/...`, `tests/...`, `examples/...`,
+    `scripts/...`, `docs/...` path references (with or without backticks;
+    trailing `:line`, wildcards, and `...` ellipses are tolerated), and
+  * `python -m <module>` / `python <script.py>` invocations,
+
+then verifies each path exists and each module resolves under
+`PYTHONPATH=src` — so a rename or deletion can never leave the
+documentation silently pointing at nothing.
+
+  PYTHONPATH=src python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import importlib.util
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+# resolve modules the way the documented commands run them: from the repo
+# root with PYTHONPATH=src
+for p in (str(REPO), str(REPO / "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+PATH_RE = re.compile(
+    r"(?<![\w/.-])((?:src/repro|benchmarks|tests|examples|scripts|docs)"
+    r"(?:/[A-Za-z0-9_.\-*]+)*/?)"
+)
+MODULE_RE = re.compile(r"python\s+-m\s+([A-Za-z0-9_.]+)")
+SCRIPT_RE = re.compile(r"python\s+((?:[A-Za-z0-9_\-]+/)+[A-Za-z0-9_\-]+\.py)")
+
+
+def _doc_files() -> list:
+    return [REPO / "README.md"] + sorted((REPO / "docs").glob("*.md"))
+
+
+def _check_path(ref: str) -> bool:
+    # tolerate wildcard ("bench_*.py") and ellipsis ("core/...") mentions:
+    # they name a family, not a file — require at least one match
+    ref = ref.rstrip("/").split(":", 1)[0]
+    if ref.endswith("..."):
+        ref = ref[: -len("...")].rstrip("/")
+    if "*" in ref:
+        parent = REPO / ref.rsplit("/", 1)[0]
+        return parent.is_dir() and any(parent.glob(ref.rsplit("/", 1)[1]))
+    return (REPO / ref).exists()
+
+
+def _check_module(mod: str) -> bool:
+    try:
+        return importlib.util.find_spec(mod) is not None
+    except (ImportError, ModuleNotFoundError):
+        return False
+
+
+def main() -> int:
+    failures = []
+    checked = 0
+    for doc in _doc_files():
+        text = doc.read_text()
+        rel = doc.relative_to(REPO)
+        for m in PATH_RE.finditer(text):
+            checked += 1
+            if not _check_path(m.group(1)):
+                failures.append(f"{rel}: missing path  {m.group(1)}")
+        for m in MODULE_RE.finditer(text):
+            checked += 1
+            if not _check_module(m.group(1)):
+                failures.append(f"{rel}: missing module python -m {m.group(1)}")
+        for m in SCRIPT_RE.finditer(text):
+            checked += 1
+            if not (REPO / m.group(1)).is_file():
+                failures.append(f"{rel}: missing script {m.group(1)}")
+    if failures:
+        print(f"doc drift: {len(failures)} stale reference(s):")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print(f"doc drift: ok ({checked} references across "
+          f"{len(_doc_files())} docs)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

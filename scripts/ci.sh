@@ -6,3 +6,5 @@ cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 # benchmark smoke: every bench module must import; quick-capable sections run
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --quick
+# doc drift: every path / python -m command the docs reference must exist
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/check_docs.py

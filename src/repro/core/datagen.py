@@ -27,6 +27,7 @@ class DataGenConfig:
     label_rate: float = 0.03            # positive-event rate
     zipf_a: float = 1.3                 # categorical id skew
     seed: int = 0
+    labeled: bool = True                # False: label stream not yet joined
 
 
 def generate_partition(
@@ -64,7 +65,10 @@ def generate_partition(
             )
             sparse[f.fid] = SparseColumn(offsets=offsets, values=vals, scores=scores)
 
-    labels = (rng.random(n) < cfg.label_rate).astype(np.float32)
+    labels = (
+        (rng.random(n) < cfg.label_rate).astype(np.float32)
+        if cfg.labeled else None
+    )
     return ColumnBatch(num_rows=n, dense=dense, sparse=sparse, labels=labels)
 
 

@@ -1,5 +1,12 @@
-from repro.core.dpp.master import DPPMaster, SessionSpec, Split, AutoScaler
+from repro.core.dpp.master import (
+    DPPMaster, SessionSpec, SessionState, Split, SplitFailure,
+    FailureReport,
+    REPORT_OK, REPORT_WORKER_LOST, REPORT_DATA_ERROR,
+)
+from repro.core.dpp.autoscale import (
+    Decision, ElasticController, ElasticPolicy, Observation,
+)
 from repro.core.dpp.worker import DPPWorker, WorkerMetrics
-from repro.core.dpp.client import DPPClient
+from repro.core.dpp.client import DPPClient, SessionFailed
 from repro.core.dpp.service import DPPService, DPPSession
 from repro.core.dpp.prefetch import PrefetchMetrics, PrefetchPlanner

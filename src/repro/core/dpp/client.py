@@ -15,6 +15,8 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.dpp.master import SessionState
+
 
 @dataclasses.dataclass
 class ClientMetrics:
@@ -25,6 +27,29 @@ class ClientMetrics:
     wait_calls: int = 0
 
 
+class SessionFailed(RuntimeError):
+    """The session reached a terminal ``FAILED`` state: every split was
+    quarantined, so no batch will ever arrive.  Carries the Master's
+    per-split failure reports (exception chains included) so the trainer
+    logs the *cause* — a poisoned partition, a dead fleet — instead of a
+    generic timeout."""
+
+    def __init__(self, state: str, failures: Sequence) -> None:
+        self.state = state
+        self.failures = list(failures)     # List[SplitFailure]
+        head = self.failures[0] if self.failures else None
+        detail = (
+            f"; first: split {head.split_id} (partition {head.partition}, "
+            f"rows [{head.row_start}, {head.row_end})) after "
+            f"{head.dispatches} dispatches — {head.last_error.strip().splitlines()[-1]}"
+            if head else ""
+        )
+        super().__init__(
+            f"DPP session {state}: {len(self.failures)} split(s) "
+            f"quarantined{detail}"
+        )
+
+
 class DPPClient:
     def __init__(
         self,
@@ -32,11 +57,13 @@ class DPPClient:
         workers: Sequence,                 # List[DPPWorker]
         fanout: int = 4,                   # partitioned round-robin cap
         prefetcher=None,                   # optional PrefetchPlanner to poke
+        master=None,                       # optional DPPMaster for state checks
     ):
         self.client_id = client_id
         self._all_workers = list(workers)
         self.fanout = fanout
         self.prefetcher = prefetcher
+        self.master = master
         self.metrics = ClientMetrics()
         self._rr = 0
         # stable digest, NOT hash(): str hashing is randomized per process
@@ -63,6 +90,21 @@ class DPPClient:
             # starving trainer: accelerate cache warming immediately
             self.prefetcher.poke()
 
+    def _check_failed(self) -> None:
+        """A terminally-FAILED session will never produce another batch:
+        raise the structured error now rather than burning the timeout.
+        (DEGRADED sessions keep serving — their healthy splits drain.)
+        Only called on the stall path, so the Master's lock is not taken
+        on every hot-path sweep."""
+        if self.master is None:
+            return
+        if self.master.state == SessionState.FAILED and not any(
+            w.buffered for w in self._all_workers
+        ):
+            raise SessionFailed(
+                SessionState.FAILED, self.master.failure_report()
+            )
+
     def get_batch(
         self, timeout: float = 10.0
     ) -> Optional[Dict[str, np.ndarray]]:
@@ -76,6 +118,7 @@ class DPPClient:
             if not mine:
                 time.sleep(0.005)
                 stalled = True
+                self._check_failed()
                 self._note_stall()
                 continue
             for i in range(len(mine)):
@@ -95,7 +138,9 @@ class DPPClient:
                         self.metrics.stall_s += time.perf_counter() - t0
                     return batch
             stalled = True
+            self._check_failed()
             self._note_stall()
         self.metrics.stall_s += time.perf_counter() - t0
         self.metrics.stalls += 1
+        self._check_failed()
         return None

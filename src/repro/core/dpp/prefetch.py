@@ -85,6 +85,12 @@ class PrefetchPlanner:
         self.metrics.pokes += 1
         self._wake.set()
 
+    def set_depth(self, depth: int) -> None:
+        """Autoscale knob (ISSUE 4): how many upcoming splits to keep
+        cache-warm.  Deeper under stall pressure, shallower when the
+        trainer is saturated and warming ahead only wastes cache space."""
+        self.depth = max(1, int(depth))
+
     # -- planning ------------------------------------------------------------
 
     def _uncached_extents(self, split: Split) -> Tuple[str, List[Tuple[int, int]]]:

@@ -20,8 +20,9 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.cache import StripeCache
-from repro.core.dpp.client import DPPClient
-from repro.core.dpp.master import AutoScaler, DPPMaster, SessionSpec
+from repro.core.dpp.autoscale import ElasticController, ElasticPolicy, Observation
+from repro.core.dpp.client import DPPClient, SessionFailed
+from repro.core.dpp.master import DPPMaster, SessionSpec
 from repro.core.dpp.prefetch import PrefetchPlanner
 from repro.core.dpp.worker import DPPWorker, WorkerMetrics
 from repro.core.warehouse import Table, Warehouse
@@ -43,6 +44,8 @@ class DPPSession:
         prefetch: bool = False,
         prefetch_depth: int = 4,
         on_stop=None,
+        dispatch_budget: int = 3,
+        elastic_policy: Optional[ElasticPolicy] = None,
     ):
         self.spec = spec
         self.table = table
@@ -58,8 +61,15 @@ class DPPSession:
         }
         self.master = DPPMaster(
             spec, partition_rows, lease_s=lease_s,
-            autoscaler=AutoScaler(max_workers=max_workers),
             partition_stripe_rows=partition_stripe_rows,
+            dispatch_budget=dispatch_budget,
+        )
+        # feedback-driven elastic scaling (ISSUE 4): stall rate + queue
+        # depth drive worker count and prefetch depth, with hysteresis
+        self.controller = ElasticController(
+            elastic_policy
+            or ElasticPolicy(max_workers=max_workers),
+            prefetch_depth=prefetch_depth,
         )
         self.tensor_cache = tensor_cache
         # background cache warmer for upcoming splits (ISSUE 3): fetches
@@ -72,11 +82,15 @@ class DPPSession:
             if prefetch else None
         )
         self.workers: List[DPPWorker] = []
+        # removed workers (crashed-and-replaced, drained scale-downs) keep
+        # contributing to the session's byte/cycle accounting
+        self._graveyard: List[DPPWorker] = []
         self._wid = 0
         for _ in range(n_workers):
             self._launch_worker()
         self.clients = [
-            DPPClient(f"client{i}", self.workers, prefetcher=self.prefetcher)
+            DPPClient(f"client{i}", self.workers, prefetcher=self.prefetcher,
+                      master=self.master)
             for i in range(n_clients)
         ]
         self.auto_scale = auto_scale
@@ -111,9 +125,15 @@ class DPPSession:
         self._stop.set()
         if self.prefetcher is not None:
             self.prefetcher.stop()
-        for w in self.workers:
+        # join the monitor BEFORE snapshotting the fleet: it is the only
+        # thread that launches workers, so afterwards no worker can be
+        # born unseen and leak past the stop/join below
+        if self._monitor is not None:
+            self._monitor.join(timeout=5.0)
+        fleet = list(self.workers)
+        for w in fleet:
             w.stop()
-        for w in self.workers:
+        for w in fleet:
             w.join(timeout=2.0)
         if self.prefetcher is not None:
             self.prefetcher.join(timeout=2.0)
@@ -124,71 +144,122 @@ class DPPSession:
 
     def _monitor_loop(self) -> None:
         last_stalls = 0
+        last_waits = 0
+        last_busy = 0.0
         while not self._stop.is_set() and not self.master.finished:
             time.sleep(self.monitor_interval_s)
-            # health: restart dead workers (stateless -> no restore needed)
+            # health: restart dead workers (stateless -> no restore needed);
+            # retired (drained) workers exited on purpose — remove them once
+            # their buffers are empty instead of "restarting" the scale-down
             for w in list(self.workers):
-                if not w.alive and w._thread is not None and not w._thread.is_alive():
-                    if not self.master.finished:
-                        self.master.forget_worker(w.worker_id)
+                if w._thread is None or w._thread.is_alive():
+                    continue
+                if w.retired:
+                    if w.buffered == 0:
                         self.workers.remove(w)
-                        nw = self._launch_worker()
-                        nw.start()
-                        self.restart_events.append(w.worker_id)
+                        self._graveyard.append(w)
                         for c in self.clients:
                             c.rebind(self.workers)
+                elif not w.alive and not self.master.finished:
+                    self.master.forget_worker(w.worker_id)
+                    # keep the corpse in the fleet until clients drain its
+                    # buffer — batches of splits the Master already counted
+                    # done must not vanish with the worker.  The retired
+                    # branch above removes it once empty.
+                    w.retired = True
+                    nw = self._launch_worker()
+                    nw.start()
+                    self.restart_events.append(w.worker_id)
+                    for c in self.clients:
+                        c.rebind(self.workers)
             if not self.auto_scale:
                 continue
+            # observation: stall *rate* (stalled get_batch fraction since
+            # the last tick) + fleet queue depth + worker utilization
             buffered = sum(w.buffered for w in self.workers)
             stalls = sum(c.metrics.stalls for c in self.clients)
-            busy = sum(w.metrics.busy_s for w in self.workers)
-            wall = max(self.monitor_interval_s, 1e-6) * max(len(self.workers), 1)
-            cpu_util = min(busy / wall, 1.0)
-            delta = self.master.scaling_decision(
-                len(self.workers), buffered, cpu_util, stalls - last_stalls
+            waits = sum(c.metrics.wait_calls for c in self.clients)
+            # graveyard included: removing a worker must not make the busy
+            # delta go negative (clamped to 0) and fake an idle tick
+            busy = sum(
+                w.metrics.busy_s for w in self.workers + self._graveyard
             )
-            last_stalls = stalls
-            if delta > 0:
-                for _ in range(delta):
+            active = [w for w in self.workers if not w.retired]
+            d_waits = max(waits - last_waits, 1)
+            stall_rate = max(stalls - last_stalls, 0) / d_waits
+            wall = max(self.monitor_interval_s, 1e-6) * max(len(active), 1)
+            cpu_util = min(max(busy - last_busy, 0.0) / wall, 1.0)
+            last_stalls, last_waits, last_busy = stalls, waits, busy
+            decision = self.controller.observe(Observation(
+                n_workers=len(active), buffered_batches=buffered,
+                stall_rate=stall_rate, cpu_util=cpu_util,
+            ))
+            if decision.prefetch_depth is not None and self.prefetcher is not None:
+                self.prefetcher.set_depth(decision.prefetch_depth)
+            if decision.worker_delta > 0:
+                for _ in range(decision.worker_delta):
                     w = self._launch_worker()
                     w.start()
                 for c in self.clients:
                     c.rebind(self.workers)
-                self.scale_events.append({"t": time.time(), "delta": delta})
-            elif delta < 0:
-                victims = self.workers[delta:]
+            elif decision.worker_delta < 0:
+                victims = active[decision.worker_delta:]
                 for v in victims:
-                    v.stop()   # drain: stops pulling new splits
-                self.scale_events.append({"t": time.time(), "delta": delta})
+                    # graceful drain: finish + deliver the in-flight split,
+                    # stop pulling new ones, retire without a health restart
+                    v.retired = True
+                    v.drain()
+            if decision.worker_delta != 0:
+                self.scale_events.append({
+                    "t": time.time(), "delta": decision.worker_delta,
+                    "reason": decision.reason,
+                })
 
-    # -- aggregate metrics -------------------------------------------------------
+    # -- state + aggregate metrics ------------------------------------------------
+
+    @property
+    def state(self) -> str:
+        """``SessionState``: RUNNING / COMPLETED / DEGRADED / FAILED."""
+        return self.master.state
+
+    def failure_report(self):
+        """Quarantined splits with their exception chains (ISSUE 4)."""
+        return self.master.failure_report()
 
     def worker_metrics(self) -> WorkerMetrics:
         total = WorkerMetrics()
-        for w in self.workers:
+        for w in list(self.workers) + list(self._graveyard):
             total.merge(w.metrics)
         return total
 
     def run_to_completion(
         self, max_batches: Optional[int] = None, timeout_s: float = 120.0
     ) -> List[Dict[str, np.ndarray]]:
-        """Drive client 0 until the dataset is exhausted (one epoch, §5.1)."""
+        """Drive client 0 until the dataset is exhausted (one epoch, §5.1).
+
+        A DEGRADED session drains normally — every healthy split's batches
+        are delivered and the quarantine is left for ``failure_report()``.
+        A FAILED session raises ``SessionFailed`` (from the client) with
+        the offending splits attached; the fleet is stopped either way.
+        """
         self.start()
         out = []
         deadline = time.time() + timeout_s
-        while time.time() < deadline:
-            # short poll: the post-exhaustion drain check costs one poll
-            # interval, not a whole client timeout (which would be billed
-            # as trainer stall time and swamp the Table-7 metric)
-            batch = self.clients[0].get_batch(timeout=0.25)
-            if batch is not None:
-                out.append(batch)
-                if max_batches and len(out) >= max_batches:
+        try:
+            while time.time() < deadline:
+                # short poll: the post-exhaustion drain check costs one poll
+                # interval, not a whole client timeout (which would be billed
+                # as trainer stall time and swamp the Table-7 metric)
+                batch = self.clients[0].get_batch(timeout=0.25)
+                if batch is not None:
+                    out.append(batch)
+                    if max_batches and len(out) >= max_batches:
+                        break
+                    continue
+                if self.master.finished and all(w.buffered == 0 for w in self.workers):
                     break
-                continue
-            if self.master.finished and all(w.buffered == 0 for w in self.workers):
-                break
-        self.stop()
+        finally:
+            self.stop()
         return out
 
 
@@ -217,6 +288,7 @@ class DPPService:
             warehouse.attach_cache(self.stripe_cache)
         self.tensor_cache = tensor_cache
         self.sessions: Dict[str, DPPSession] = {}
+        self.session_errors: Dict[str, SessionFailed] = {}
 
     def create_session(
         self,
@@ -263,9 +335,16 @@ class DPPService:
         the combo-window workload whose overlapping reads the shared
         cache collapses."""
         results: Dict[str, List[Dict[str, np.ndarray]]] = {}
+        self.session_errors: Dict[str, SessionFailed] = {}
 
         def _drive(name: str, sess: DPPSession) -> None:
-            results[name] = sess.run_to_completion(max_batches, timeout_s)
+            try:
+                results[name] = sess.run_to_completion(max_batches, timeout_s)
+            except SessionFailed as e:
+                # one tenant's poisoned data must not take down the fleet:
+                # record the structured failure, keep the other sessions
+                results[name] = []
+                self.session_errors[name] = e
 
         threads = [
             threading.Thread(target=_drive, args=(n, s), daemon=True)

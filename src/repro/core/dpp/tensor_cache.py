@@ -58,9 +58,14 @@ class TensorCache:
         self.stats = CacheStats()
 
     @staticmethod
-    def key(spec: SessionSpec, split: Split) -> Tuple:
-        return (spec.table, split.partition, split.row_start, split.row_end,
-                pipeline_fingerprint(spec))
+    def key(spec: SessionSpec, split: Split, generation: int = 0) -> Tuple:
+        """A split's determinism boundary: (table, partition, row range,
+        pipeline fingerprint) **plus the partition generation** — the
+        warehouse bumps it on every ``rewrite_partition``, so rewritten
+        bytes can never be served stale preprocessed tensors (the cached
+        entries for the old generation simply age out of the LRU)."""
+        return (spec.table, split.partition, generation,
+                split.row_start, split.row_end, pipeline_fingerprint(spec))
 
     def get(self, key: Tuple) -> Optional[List[Dict[str, np.ndarray]]]:
         with self._lock:

@@ -22,11 +22,17 @@ import dataclasses
 import queue
 import threading
 import time
+import traceback
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.dpp.master import DPPMaster, SessionSpec, Split
+from repro.core.dpp.master import (
+    REPORT_DATA_ERROR,
+    DPPMaster,
+    SessionSpec,
+    Split,
+)
 from repro.core.reader import TableReader
 from repro.core.transforms import materialize_dlrm_batch
 from repro.core.warehouse import Table
@@ -42,6 +48,7 @@ class WorkerMetrics:
     transform_s: float = 0.0
     load_s: float = 0.0
     splits_done: int = 0
+    data_errors: int = 0               # splits reported as data_error
     rows_done: int = 0                 # rows served to clients
     stripes_read: int = 0              # stripes fetched + decoded
     rows_decoded: int = 0              # stripe rows decoded (incl. trim waste)
@@ -109,8 +116,10 @@ class DPPWorker:
         self.tensor_cache = tensor_cache
         self.prefetch_stripes = max(1, prefetch_stripes)
         self._stop = threading.Event()
+        self._drain = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self.alive = True
+        self.retired = False        # scale-down victim: don't health-restart
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -120,6 +129,13 @@ class DPPWorker:
 
     def stop(self) -> None:
         self._stop.set()
+
+    def drain(self) -> None:
+        """Graceful scale-down: stop pulling new splits but finish —
+        and deliver — the one in flight.  ``stop()`` by contrast abandons
+        undelivered batches (its split is never reported ``ok``, so a
+        hard-stopped worker's split is re-dispatched, not lost)."""
+        self._drain.set()
 
     def join(self, timeout: Optional[float] = None) -> None:
         if self._thread:
@@ -133,6 +149,8 @@ class DPPWorker:
             tenant=self.tenant,
         )
         while not self._stop.is_set():
+            if self._drain.is_set():
+                break       # graceful exit: current split already delivered
             if (
                 self.fail_after_splits is not None
                 and self.metrics.splits_done >= self.fail_after_splits
@@ -146,18 +164,41 @@ class DPPWorker:
                 time.sleep(0.01)
                 continue
             try:
-                for batch in self.process_split(reader, split):
-                    while not self._stop.is_set():
-                        try:
-                            self.buffer.put(batch, timeout=0.1)
-                            break
-                        except queue.Full:
-                            continue
-                self.master.complete_split(self.worker_id, split.split_id)
+                batches = self.process_split(reader, split)
             except Exception:
-                # let the lease expire; Master re-dispatches
-                self.alive = False
-                raise
+                # Extract/transform raised on this split's bytes.  The
+                # worker is fine — only the data is suspect — so report a
+                # typed data_error with the traceback (distinct from a
+                # lease expiry, which signals a LOST worker) and move on
+                # to the next split instead of dying and forcing a
+                # restart-and-retry livelock.
+                self.metrics.data_errors += 1
+                self.master.complete_split(
+                    self.worker_id, split.split_id,
+                    status=REPORT_DATA_ERROR, error=traceback.format_exc(),
+                )
+                continue
+            delivered = True
+            for batch in batches:
+                placed = False
+                while not self._stop.is_set():
+                    try:
+                        self.buffer.put(batch, timeout=0.1)
+                        placed = True
+                        break
+                    except queue.Full:
+                        # back-pressured on a full buffer, not lost: the
+                        # heartbeat extends our lease so the Master never
+                        # charges a slow consumer as a dead worker
+                        self.master.heartbeat(self.worker_id)
+                        continue
+                if not placed:
+                    delivered = False   # hard-stopped mid-delivery
+                    break
+            if delivered:
+                self.master.complete_split(self.worker_id, split.split_id)
+            # else: no ok report — the lease lapses and the split is
+            # re-dispatched rather than marked done with dropped batches
         self.alive = False
 
     # -- ETL -------------------------------------------------------------------
@@ -176,7 +217,10 @@ class DPPWorker:
         if self.tensor_cache is not None:
             from repro.core.dpp.tensor_cache import TensorCache
 
-            key = TensorCache.key(self.spec, split)
+            # generation-aware key: a partition rewrite bumps
+            # ``meta.generation``, so post-rewrite splits can never be
+            # served the pre-rewrite preprocessed tensors
+            key = TensorCache.key(self.spec, split, meta.generation)
             cached = self.tensor_cache.get(key)
             if cached is not None:
                 self.metrics.splits_done += 1
@@ -214,6 +258,7 @@ class DPPWorker:
 
         m = self.metrics
         bs = self.spec.batch_size
+        split_labeled: Optional[bool] = None   # first stripe sets the law
         out: List[Dict[str, np.ndarray]] = []
         # transformed stripes awaiting batch emission: (env, labels, rows).
         # Concatenated once per emission, not once per stripe, so carry rows
@@ -265,6 +310,8 @@ class DPPWorker:
                 if isinstance(item, BaseException):
                     raise item
                 sr = item
+                # long splits must not look like lost workers mid-ETL
+                self.master.heartbeat(self.worker_id)
                 m.extract_s += extract_dt
                 m.storage_rx_bytes += sr.bytes_from_storage
                 m.cache_rx_bytes += sr.bytes_from_cache
@@ -277,6 +324,21 @@ class DPPWorker:
                 t3 = time.perf_counter()
                 m.transform_s += t3 - t2
 
+                # per-SPLIT label uniformity, checked at stripe arrival:
+                # the _concat_labels guard below only sees one drain window
+                # at a time, so a label transition landing exactly on a
+                # batch-aligned boundary would slip through it silently
+                stripe_labeled = sr.batch.labels is not None
+                if split_labeled is None:
+                    split_labeled = stripe_labeled
+                elif stripe_labeled != split_labeled:
+                    raise ValueError(
+                        "mixed labeled/unlabeled stripes within one split: "
+                        f"stripe at rows [{sr.row_start}, {sr.row_end}) is "
+                        f"{'labeled' if stripe_labeled else 'unlabeled'} but "
+                        "the split started "
+                        f"{'labeled' if split_labeled else 'unlabeled'}"
+                    )
                 pending.append((env, sr.batch.labels, sr.batch.num_rows))
                 pending_rows += sr.batch.num_rows
                 _drain(final=False)

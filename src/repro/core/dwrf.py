@@ -317,6 +317,51 @@ def write_dwrf(batch: ColumnBatch, opts: DwrfWriterOptions) -> DwrfFile:
     return DwrfFile(data=buf.getvalue(), footer=footer)
 
 
+def concat_dwrf(files: Sequence[DwrfFile]) -> DwrfFile:
+    """Byte-concatenate encoded DWRF files into one file whose footer
+    indexes every input's stripes (offsets and row ranges rebased).
+
+    This is how multi-source ingestion lands in one partition — e.g. the
+    streaming join emitting a labeled head while the tail's labels have
+    not arrived yet.  Note the hazard this enables (and which the DPP
+    worker must surface as a ``data_error``): the halves may disagree on
+    which streams exist per stripe, producing mixed labeled/unlabeled
+    stripes inside one file.
+    """
+    assert files, "concat_dwrf of nothing"
+    flattened = files[0].footer.flattened
+    assert all(f.footer.flattened == flattened for f in files), (
+        "cannot mix flattened and map-encoded files"
+    )
+    data = bytearray()
+    stripes: List[StripeInfo] = []
+    row_base = 0
+    for f in files:
+        byte_base = len(data)
+        data.extend(f.data)
+        for st in f.footer.stripes:
+            stripes.append(
+                StripeInfo(
+                    row_start=st.row_start + row_base,
+                    num_rows=st.num_rows,
+                    offset=st.offset + byte_base,
+                    length=st.length,
+                    streams=[
+                        dataclasses.replace(s, offset=s.offset + byte_base)
+                        for s in st.streams
+                    ],
+                )
+            )
+        row_base += f.footer.num_rows
+    footer = DwrfFooter(
+        num_rows=row_base,
+        flattened=flattened,
+        stripes=stripes,
+        feature_order=list(files[0].footer.feature_order),
+    )
+    return DwrfFile(data=bytes(data), footer=footer)
+
+
 # ---------------------------------------------------------------------------
 # Decoding (given raw stream bytes fetched from storage)
 # ---------------------------------------------------------------------------

@@ -25,6 +25,10 @@ class PartitionMeta:
     num_rows: int
     nbytes: int
     footer: dwrf.DwrfFooter
+    # bumped on every rewrite_partition: keys derived data (e.g. the
+    # preprocessed-tensor cache) to one file version, independently of
+    # whether a stripe cache is attached
+    generation: int = 0
 
 
 class Table:
@@ -52,12 +56,20 @@ class Table:
         batch: ColumnBatch,
         opts: Optional[dwrf.DwrfWriterOptions] = None,
     ) -> PartitionMeta:
-        f = self._encode(batch, opts)
+        return self.write_partition_encoded(index, self._encode(batch, opts))
+
+    def write_partition_encoded(
+        self, index: int, f: dwrf.DwrfFile
+    ) -> PartitionMeta:
+        """Install an already-encoded DWRF file as a partition — the hook
+        for ingestion paths that assemble files out-of-band (e.g.
+        ``dwrf.concat_dwrf`` merging differently-labeled halves, the
+        fault-injection surface for poisoned-split testing)."""
         path = f"warehouse/{self.name}/part-{index:05d}.dwrf"
         self.fs.create(path, f.data)
         self._register_stripes(path, f.footer, f.data)
         meta = PartitionMeta(
-            index=index, path=path, num_rows=batch.num_rows,
+            index=index, path=path, num_rows=f.footer.num_rows,
             nbytes=f.nbytes, footer=f.footer,
         )
         self.partitions[index] = meta
@@ -81,7 +93,7 @@ class Table:
         self._register_stripes(old.path, f.footer, f.data)
         meta = PartitionMeta(
             index=index, path=old.path, num_rows=batch.num_rows,
-            nbytes=f.nbytes, footer=f.footer,
+            nbytes=f.nbytes, footer=f.footer, generation=old.generation + 1,
         )
         self.partitions[index] = meta
         return meta

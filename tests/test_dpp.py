@@ -5,7 +5,7 @@ import pytest
 
 from repro.core import dwrf
 from repro.core.datagen import DataGenConfig
-from repro.core.dpp import AutoScaler, DPPMaster, DPPSession, SessionSpec
+from repro.core.dpp import DPPMaster, DPPSession, SessionSpec
 from repro.core.schema import make_schema
 from repro.core.transforms import default_dlrm_pipeline
 from repro.core.warehouse import Warehouse
@@ -101,15 +101,6 @@ def test_forget_worker_releases_leases():
     m.forget_worker("dead")
     s2 = m.get_split("alive")
     assert s2.split_id == s.split_id
-
-
-def test_autoscaler_decisions():
-    a = AutoScaler(max_workers=64)
-    assert a.decide(4, buffered_batches=0, mean_cpu_util=0.9, stalls_since_last=3) > 0
-    assert a.decide(4, buffered_batches=100, mean_cpu_util=0.1, stalls_since_last=0) < 0
-    assert a.decide(4, buffered_batches=10, mean_cpu_util=0.6, stalls_since_last=0) == 0
-    # respects max
-    assert a.decide(64, buffered_batches=0, mean_cpu_util=1.0, stalls_since_last=5) == 0
 
 
 def test_autoscaling_session_scales_out():
@@ -224,6 +215,345 @@ def test_prefetch_planner_warms_only_uncached_segments():
         dwrf.DwrfWriterOptions(flattened=True, stripe_rows=256),
     )
     assert planner2.prefetch_once() > 0
+
+
+# -- fault-tolerant control plane (ISSUE 4) ----------------------------------
+
+
+def _poisoned_table(n_healthy=2, rows=1024, name="poison", head_rows=256):
+    """``n_healthy`` good partitions plus one whose stripes are mixed
+    labeled/unlabeled — poisoned: extract/transform deterministically
+    raises on it, whichever worker draws it."""
+    from repro.core.datagen import generate_partition
+
+    s = make_schema(name, 20, 6, seed=0)
+    wh = Warehouse()
+    t = wh.create_table(s)
+    opts = dwrf.DwrfWriterOptions(flattened=True, stripe_rows=256)
+    t.generate(n_healthy, DataGenConfig(rows_per_partition=rows, seed=1), opts)
+    head = dwrf.write_dwrf(
+        generate_partition(s, n_healthy,
+                           DataGenConfig(rows_per_partition=head_rows, seed=2)),
+        opts,
+    )
+    tail = dwrf.write_dwrf(
+        generate_partition(
+            s, n_healthy,
+            DataGenConfig(rows_per_partition=rows - head_rows, seed=3,
+                          labeled=False),
+        ),
+        opts,
+    )
+    t.write_partition_encoded(n_healthy, dwrf.concat_dwrf([head, tail]))
+    return t
+
+
+def test_poisoned_split_degrades_within_budget_and_drains_healthy():
+    from repro.core.dpp import SessionState
+
+    budget, lease_s = 2, 2.0
+    t = _poisoned_table()
+    sess = DPPSession(
+        _spec(t, batch_size=512, rows_per_split=1024), t,
+        n_workers=2, lease_s=lease_s, dispatch_budget=budget,
+    )
+    t0 = time.time()
+    batches = sess.run_to_completion(timeout_s=60)
+    elapsed = time.time() - t0
+    # terminates within budget x lease — no livelock on worker restarts
+    assert elapsed <= budget * lease_s, elapsed
+    assert sess.state == SessionState.DEGRADED
+    # healthy splits' batches are still delivered, exactly
+    assert sum(b["label"].shape[0] for b in batches) == 2 * 1024
+    # the offending split + _concat_labels exception chain is surfaced
+    [f] = sess.failure_report()
+    assert f.partition == 2 and f.dispatches == budget
+    assert all(s == "data_error" for s in f.statuses)
+    assert "mixed labeled/unlabeled" in f.last_error
+    # full traceback is surfaced (raising frame + exception), not a repr
+    assert "Traceback" in f.last_error and "process_split" in f.last_error
+    # data errors did NOT kill workers: no restart churn
+    assert sess.restart_events == []
+
+
+def test_poisoned_split_detected_on_batch_aligned_boundary():
+    """The label transition lands exactly on a batch-aligned drain
+    boundary (head rows % batch_size == 0, zero carry): the per-window
+    ``_concat_labels`` guard alone would miss it, so the worker's
+    per-split uniformity check must still raise the data_error."""
+    from repro.core.dpp import SessionState
+
+    t = _poisoned_table(n_healthy=1, name="poisonb", head_rows=512)
+    sess = DPPSession(
+        _spec(t, batch_size=256, rows_per_split=1024), t,
+        n_workers=1, lease_s=2.0, dispatch_budget=2,
+    )
+    batches = sess.run_to_completion(timeout_s=60)
+    assert sess.state == SessionState.DEGRADED
+    # every delivered batch is labeled; none of the poisoned split's
+    # unlabeled rows slipped through silently
+    assert all("label" in b for b in batches)
+    assert sum(b["label"].shape[0] for b in batches) == 1024
+    [f] = sess.failure_report()
+    assert "mixed labeled/unlabeled" in f.last_error
+
+
+def test_all_splits_poisoned_raises_session_failed():
+    from repro.core.dpp import SessionFailed, SessionState
+
+    t = _poisoned_table(n_healthy=0, name="poisonf")
+    sess = DPPSession(
+        _spec(t, batch_size=512, rows_per_split=1024), t,
+        n_workers=1, lease_s=2.0, dispatch_budget=2,
+    )
+    with pytest.raises(SessionFailed) as ei:
+        sess.run_to_completion(timeout_s=60)
+    assert sess.state == SessionState.FAILED
+    assert ei.value.state == SessionState.FAILED
+    assert len(ei.value.failures) == 1
+    assert "mixed labeled/unlabeled" in ei.value.failures[0].last_error
+
+
+def test_master_budget_quarantines_on_worker_lost():
+    from repro.core.dpp import SessionState
+
+    t = _table(n_partitions=1, rows=256)
+    spec = _spec(t)
+    rows = {p: t.partitions[p].num_rows for p in spec.partitions}
+    m = DPPMaster(spec, rows, lease_s=0.02, dispatch_budget=2)
+    assert m.state == SessionState.RUNNING
+    s = m.get_split("flaky")              # dispatch 1
+    time.sleep(0.05)                      # lease expires: worker_lost
+    s2 = m.get_split("flaky")             # reclaim + re-dispatch (2 = budget)
+    assert s2 is not None and s2.split_id == s.split_id
+    time.sleep(0.05)                      # second expiry exhausts the budget
+    assert m.get_split("flaky") is None   # quarantined, never re-dispatched
+    assert m.finished
+    assert m.state == SessionState.FAILED
+    [f] = m.failure_report()
+    assert f.dispatches == 2
+    assert all(s == "worker_lost" for s in f.statuses)
+    assert "lease expired" in f.last_error
+
+
+def test_master_data_error_requeues_then_quarantines():
+    from repro.core.dpp import REPORT_DATA_ERROR
+
+    t = _table(n_partitions=1, rows=512)
+    spec = _spec(t)
+    rows = {p: t.partitions[p].num_rows for p in spec.partitions}
+    m = DPPMaster(spec, rows, lease_s=100.0, dispatch_budget=2)
+    s = m.get_split("w0")
+    m.complete_split("w0", s.split_id, status=REPORT_DATA_ERROR, error="boom0")
+    # under budget: re-queued at the front for a retry
+    s2 = m.get_split("w1")
+    assert s2.split_id == s.split_id
+    m.complete_split("w1", s2.split_id, status=REPORT_DATA_ERROR, error="boom1")
+    # budget exhausted: quarantined with the full per-dispatch chain
+    assert s.split_id in m.quarantined
+    f = m.quarantined[s.split_id]
+    assert [r.error for r in f.reports] == ["boom0", "boom1"]
+    assert [r.worker_id for r in f.reports] == ["w0", "w1"]
+
+
+def test_master_checkpoint_preserves_quarantine():
+    from repro.core.dpp import REPORT_DATA_ERROR, SessionState
+
+    t = _table()
+    spec = _spec(t)
+    rows = {p: t.partitions[p].num_rows for p in spec.partitions}
+    m = DPPMaster(spec, rows, dispatch_budget=1)
+    s = m.get_split("w0")
+    m.complete_split("w0", s.split_id, status=REPORT_DATA_ERROR, error="bad")
+    ckpt = m.checkpoint()
+    m2 = DPPMaster.restore(ckpt, rows)
+    # the quarantined split stays quarantined across Master failover
+    assert s.split_id in m2.quarantined
+    assert m2.quarantined[s.split_id].last_error == "bad"
+    while True:
+        nxt = m2.get_split("w1")
+        if nxt is None:
+            break
+        assert nxt.split_id != s.split_id
+        m2.complete_split("w1", nxt.split_id)
+    assert m2.state == SessionState.DEGRADED
+
+
+def test_heartbeat_extends_lease():
+    t = _table(n_partitions=1, rows=256)
+    spec = _spec(t)
+    rows = {p: t.partitions[p].num_rows for p in spec.partitions}
+    m = DPPMaster(spec, rows, lease_s=0.05, dispatch_budget=1)
+    s = m.get_split("slowpoke")
+    # a slow-but-alive worker heartbeats through a long split: the lease
+    # keeps extending and is never charged worker_lost
+    for _ in range(4):
+        time.sleep(0.03)
+        m.heartbeat("slowpoke")
+    assert m.get_split("thief") is None        # still exclusively leased
+    assert m.failure_report() == []
+    m.complete_split("slowpoke", s.split_id)
+    assert m.finished and m.state == "COMPLETED"
+
+
+def test_stale_report_from_superseded_dispatch_is_ignored():
+    from repro.core.dpp import REPORT_DATA_ERROR, SessionState
+
+    t = _table(n_partitions=1, rows=256)
+    spec = _spec(t)
+    rows = {p: t.partitions[p].num_rows for p in spec.partitions}
+    m = DPPMaster(spec, rows, lease_s=0.03, dispatch_budget=2)
+    s = m.get_split("w0")
+    time.sleep(0.05)                        # w0's lease expires (charge 1)
+    s2 = m.get_split("w1")                  # re-dispatched to w1 (dispatch 2)
+    assert s2.split_id == s.split_id
+    # w0 wakes up and reports late: must not double-charge the budget nor
+    # cancel w1's active lease
+    m.complete_split("w0", s.split_id, status=REPORT_DATA_ERROR, error="late")
+    assert s.split_id not in m.quarantined
+    assert m.get_split("w2") is None        # w1 still holds the lease
+    m.complete_split("w1", s2.split_id)     # current holder succeeds
+    assert m.state == SessionState.COMPLETED
+
+
+def test_late_ok_from_expired_lease_is_accepted():
+    t = _table(n_partitions=1, rows=256)
+    spec = _spec(t)
+    rows = {p: t.partitions[p].num_rows for p in spec.partitions}
+    m = DPPMaster(spec, rows, lease_s=0.03, dispatch_budget=3)
+    s = m.get_split("w0")
+    time.sleep(0.05)
+    s2 = m.get_split("w1")                  # straggler mitigation re-dispatch
+    assert s2.split_id == s.split_id
+    m.complete_split("w0", s.split_id)      # the straggler finishes first
+    assert m.finished                       # done — whoever completed it
+    m.complete_split("w1", s2.split_id)     # duplicate ok: no-op
+    done, total = m.progress
+    assert (done, total) == (1, 1)
+
+
+def test_late_ok_un_quarantines_delivered_split():
+    from repro.core.dpp import SessionState
+
+    t = _table(n_partitions=1, rows=256)
+    spec = _spec(t)
+    rows = {p: t.partitions[p].num_rows for p in spec.partitions}
+    m = DPPMaster(spec, rows, lease_s=0.02, dispatch_budget=1)
+    s = m.get_split("slow")
+    time.sleep(0.05)
+    m.get_split("other")                    # reclaim: budget 1 -> quarantine
+    assert s.split_id in m.quarantined
+    # the slow worker finished anyway and its batches were delivered: the
+    # ok must un-quarantine, not mislabel delivered data as failed
+    m.complete_split("slow", s.split_id)
+    assert m.quarantined == {}
+    assert m.state == SessionState.COMPLETED
+
+
+def test_checkpoint_preserves_under_budget_failure_history():
+    from repro.core.dpp import REPORT_DATA_ERROR
+
+    t = _table(n_partitions=1, rows=256)
+    spec = _spec(t)
+    rows = {p: t.partitions[p].num_rows for p in spec.partitions}
+    m = DPPMaster(spec, rows, lease_s=100.0, dispatch_budget=2)
+    s = m.get_split("w0")
+    m.complete_split("w0", s.split_id, status=REPORT_DATA_ERROR, error="boom0")
+    m2 = DPPMaster.restore(m.checkpoint(), rows, dispatch_budget=2)
+    s2 = m2.get_split("w1")
+    assert s2.split_id == s.split_id
+    m2.complete_split("w1", s2.split_id, status=REPORT_DATA_ERROR, error="boom1")
+    # the pre-failover report survived: the full chain is surfaced
+    [f] = m2.failure_report()
+    assert [r.error for r in f.reports] == ["boom0", "boom1"]
+
+
+def test_drained_worker_retires_without_restart():
+    t = _table()
+    sess = DPPSession(_spec(t), t, n_workers=2, monitor_interval_s=0.05)
+    victim = sess.workers[1]
+    victim.retired = True
+    victim.drain()
+    batches = sess.run_to_completion(timeout_s=60)
+    # the epoch is exact: draining never drops delivered rows
+    assert sum(b["label"].shape[0] for b in batches) == 2 * 1024
+    # the drained worker was removed, not "restarted" by the health check
+    assert sess.restart_events == []
+    assert victim not in sess.workers
+
+
+def test_elastic_controller_hysteresis_and_cooldown():
+    from repro.core.dpp import ElasticController, ElasticPolicy, Observation
+
+    pol = ElasticPolicy(hysteresis_ticks=2, cooldown_ticks=2, max_workers=8)
+    c = ElasticController(pol, prefetch_depth=4)
+    stall = Observation(n_workers=2, buffered_batches=0, stall_rate=0.5,
+                        cpu_util=1.0)
+    calm = Observation(n_workers=2, buffered_batches=8, stall_rate=0.0,
+                       cpu_util=0.6)
+    # one transient stall tick does NOT scale (hysteresis)
+    assert c.observe(stall).worker_delta == 0
+    assert c.observe(calm).worker_delta == 0
+    # sustained pressure for hysteresis_ticks does — and deepens prefetch
+    assert c.observe(stall).worker_delta == 0
+    d = c.observe(stall)
+    assert d.worker_delta > 0
+    assert d.prefetch_depth == 8
+    # cooldown: even sustained pressure is a no-op while settling
+    assert c.observe(stall).worker_delta == 0
+    assert c.observe(stall).worker_delta == 0
+    # cooldown expired + pressure persisted: acts again
+    assert c.observe(stall).worker_delta > 0
+
+
+def test_elastic_controller_scales_down_when_idle():
+    from repro.core.dpp import ElasticController, ElasticPolicy, Observation
+
+    pol = ElasticPolicy(hysteresis_ticks=2, cooldown_ticks=0, max_workers=8)
+    c = ElasticController(pol, prefetch_depth=8)
+    idle = Observation(n_workers=4, buffered_batches=100, stall_rate=0.0,
+                       cpu_util=0.1)
+    assert c.observe(idle).worker_delta == 0
+    d = c.observe(idle)
+    assert d.worker_delta < 0
+    assert d.prefetch_depth == 4
+    # never below min_workers
+    floor = Observation(n_workers=1, buffered_batches=100, stall_rate=0.0,
+                        cpu_util=0.0)
+    assert c.observe(floor).worker_delta == 0
+    assert c.observe(floor).worker_delta == 0
+
+
+def test_tensor_cache_generation_aware_keys_after_rewrite():
+    """ROADMAP staleness gap: a rewritten partition must never be served
+    the pre-rewrite preprocessed tensors from the TensorCache."""
+    from repro.core.datagen import generate_partition
+    from repro.core.dpp.tensor_cache import TensorCache
+
+    t = _table(n_partitions=1, rows=512)
+    spec = _spec(t, partitions=(0,))
+    cache = TensorCache()
+
+    def _epoch():
+        sess = DPPSession(spec, t, n_workers=1, tensor_cache=cache)
+        out = sess.run_to_completion(timeout_s=60)
+        return out, sess.worker_metrics()
+
+    first, m1 = _epoch()
+    assert m1.rows_from_cache == 0
+    warm, m2 = _epoch()
+    assert m2.rows_from_cache == 512          # same generation: cache hit
+    t.rewrite_partition(
+        0, generate_partition(t.schema, 0,
+                              DataGenConfig(rows_per_partition=512, seed=99)),
+        dwrf.DwrfWriterOptions(flattened=True, stripe_rows=256),
+    )
+    assert t.partitions[0].generation == 1
+    post, m3 = _epoch()
+    assert m3.rows_from_cache == 0            # new generation: no stale serve
+    ref = sorted(float(np.nan_to_num(b["dense"]).sum()) for b in post)
+    stale = sorted(float(np.nan_to_num(b["dense"]).sum()) for b in warm)
+    assert ref != stale                       # content actually changed
 
 
 def test_session_with_prefetch_serves_identical_batches():
