@@ -26,6 +26,7 @@ SECTIONS = [
     "trainer",          # Table 8 / Fig 8 / Table 7
     "optimizations",    # Table 12
     "kernels",          # §7.2 fused transform + hot kernels
+    "engine",           # §7.2 fused TransformEngine vs per-feature (ISSUE 5)
     "power",            # Fig 1
     "coordination",     # Figs 4/5/6, Table 2
 ]

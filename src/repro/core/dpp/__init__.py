@@ -10,3 +10,7 @@ from repro.core.dpp.worker import DPPWorker, WorkerMetrics
 from repro.core.dpp.client import DPPClient, SessionFailed
 from repro.core.dpp.service import DPPService, DPPSession
 from repro.core.dpp.prefetch import PrefetchMetrics, PrefetchPlanner
+from repro.core.engine import (
+    CompiledPlan, EngineStats, NumpyEngine, PallasEngine, TransformEngine,
+    compile_pipeline, decode_plan, make_engine,
+)

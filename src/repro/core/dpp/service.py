@@ -46,11 +46,13 @@ class DPPSession:
         on_stop=None,
         dispatch_budget: int = 3,
         elastic_policy: Optional[ElasticPolicy] = None,
+        engine: str = "numpy",
     ):
         self.spec = spec
         self.table = table
         self.name = name                   # tenant id for the stripe cache
         self._on_stop = on_stop            # e.g. release the tenant's share
+        self.engine = engine               # TransformEngine for every worker
         partition_rows = {p: table.partitions[p].num_rows for p in spec.partitions}
         # stripe-aligned splits: the writer emits uniform stripes, so the
         # first stripe's row count is the partition's stripe size
@@ -106,7 +108,7 @@ class DPPSession:
         w = DPPWorker(
             f"w{self._wid}", self.master, self.table,
             fail_after_splits=fail_after, tensor_cache=self.tensor_cache,
-            tenant=self.name,
+            tenant=self.name, engine=self.engine,
         )
         self._wid += 1
         self.workers.append(w)
@@ -304,7 +306,12 @@ class DPPService:
         idle capacity stays usable by everyone).  The reservation lapses
         automatically when the session stops, so sequential jobs can each
         claim large shares without exhausting the 1.0 budget and a dead
-        job's resident bytes stop being eviction-protected."""
+        job's resident bytes stop being eviction-protected.
+
+        ``engine="pallas"`` (forwarded to every worker) runs the transform
+        stage wave-fused through ``kernels.fused_transform`` instead of
+        per-feature numpy; both engines produce byte-identical batches, so
+        mixed-engine fleets can share one ``TensorCache``."""
         reserve = (dram_share or flash_share) and self.stripe_cache is not None
         if reserve:
             # validate the share up front (so an over-committed request

@@ -33,6 +33,7 @@ from repro.core.dpp.master import (
     SessionSpec,
     Split,
 )
+from repro.core.engine import make_engine
 from repro.core.reader import TableReader
 from repro.core.transforms import materialize_dlrm_batch
 from repro.core.warehouse import Table
@@ -53,6 +54,12 @@ class WorkerMetrics:
     stripes_read: int = 0              # stripes fetched + decoded
     rows_decoded: int = 0              # stripe rows decoded (incl. trim waste)
     rows_from_cache: int = 0           # rows served by tensor-cache hits
+    # per-engine transform accounting (mirrored from EngineStats — §7.2):
+    fused_features: int = 0            # op executions served by fused kernels
+    fallback_features: int = 0         # op executions served per-feature
+    kernel_launches: int = 0           # fused pallas_calls + per-feature calls
+    transform_fused_s: float = 0.0     # transform_s attribution: fused path
+    transform_fallback_s: float = 0.0  # transform_s attribution: numpy path
 
     def merge(self, o: "WorkerMetrics") -> None:
         for f in dataclasses.fields(self):
@@ -81,6 +88,12 @@ class WorkerMetrics:
             return 1.0      # nothing read from storage: nothing over-read
         return self.rows_decoded / storage_rows
 
+    @property
+    def fused_frac(self) -> float:
+        """Fraction of transform op executions served by fused kernels."""
+        total = self.fused_features + self.fallback_features
+        return self.fused_features / total if total else 0.0
+
     def cycle_breakdown(self) -> Dict[str, float]:
         t = max(self.busy_s, 1e-9)
         return {
@@ -103,6 +116,7 @@ class DPPWorker:
         tensor_cache=None,                         # shared TensorCache (§7.5)
         prefetch_stripes: int = 2,                 # extract-ahead depth
         tenant: Optional[str] = None,              # owning job for cache shares
+        engine="numpy",                            # TransformEngine name/factory
     ):
         self.worker_id = worker_id
         self.master = master
@@ -110,6 +124,9 @@ class DPPWorker:
         self.tenant = tenant
         self.spec = master.spec
         self.pipeline = self.spec.pipeline()       # pulled from Master at startup
+        # transform stage executor (§7.2): "numpy" = per-feature reference,
+        # "pallas" = wave-fused kernel launches; engines are byte-identical
+        self.engine = make_engine(engine, self.pipeline)
         self.buffer: "queue.Queue[Dict[str, np.ndarray]]" = queue.Queue(buffer_size)
         self.metrics = WorkerMetrics()
         self.fail_after_splits = fail_after_splits
@@ -320,9 +337,17 @@ class DPPWorker:
                 m.extract_out_bytes += sr.batch.nbytes()
 
                 t2 = time.perf_counter()
-                env = self.pipeline(sr.batch)
+                env = self.engine.run(sr.batch)
                 t3 = time.perf_counter()
                 m.transform_s += t3 - t2
+                # engine counters are cumulative per exclusive engine, so a
+                # straight mirror keeps the worker metric cumulative too
+                es = self.engine.stats
+                m.fused_features = es.fused_features
+                m.fallback_features = es.fallback_features
+                m.kernel_launches = es.kernel_launches
+                m.transform_fused_s = es.fused_s
+                m.transform_fallback_s = es.fallback_s
 
                 # per-SPLIT label uniformity, checked at stripe arrival:
                 # the _concat_labels guard below only sees one drain window

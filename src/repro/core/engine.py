@@ -1,0 +1,553 @@
+"""Pluggable TransformEngine: fused Pallas execution of the transform DAG.
+
+The paper's §7.2 flagship observation is that launching one kernel over a
+tensor combining ~1000 sparse features is ~3 orders of magnitude faster
+than per-feature dispatch, and §6.3 shows transform dominating DPP worker
+cycles.  This module closes the gap between that observation and the DPP
+worker's production path:
+
+  * ``NumpyEngine`` — the reference engine: executes the per-feature DAG
+    exactly like ``TransformPipeline.__call__`` (one vectorized numpy call
+    per spec), while accounting per-op "kernel launches".
+  * ``PallasEngine`` — compiles the DAG into **waves** of fusable ops
+    (SigridHash, PositiveModulus, Clamp, Bucketize), packs each wave into
+    the (rows, features) op-code/param layout of
+    ``repro.kernels.fused_transform`` and executes the whole wave in ONE
+    ``pallas_call`` (interpret mode on CPU, compiled on TPU).  Ops the
+    kernel cannot express (NGram, Cartesian, MapId, FirstX, ...) fall back
+    per-feature to the numpy implementations.
+
+Both engines produce **byte-identical** environments (and therefore
+byte-identical minibatches): the SigridHash mixer is the shared 32-bit
+two-round multiply-xor-shift (``transforms._mix32`` == kernel
+``_hash_u32``), bucketize compares in float32 on both paths, and any op
+whose inputs would break bit-parity (ids outside int32 for
+PositiveModulus, non-float32 dense columns, ...) is *demoted* to the
+numpy fallback at run time.  TensorCache entries therefore stay
+engine-agnostic.
+
+``EngineStats`` feeds ``WorkerMetrics`` (fused vs fallback feature counts,
+kernel launches, per-path transform seconds) so Table-9-style breakdowns
+can compare engines.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.schema import ColumnBatch, SparseColumn
+from repro.core.transforms import (
+    _OPS,
+    Column,
+    TransformPipeline,
+    TransformSpec,
+)
+
+# Op codes mirror repro.kernels.fused_transform (kept import-light: jax is
+# only pulled in when a PallasEngine actually launches a wave).
+OP_IDENTITY = 0
+OP_SIGRID_HASH = 1
+OP_POSITIVE_MODULUS = 2
+OP_CLAMP = 3
+OP_BUCKETIZE = 4
+OP_CLAMP_F = 5
+OP_BUCKETIZE_F = 6
+
+_I32_MIN = -(2 ** 31)
+_I32_MAX = 2 ** 31 - 1
+_MAX_BORDERS = 512
+_F32_TINY = float(np.finfo(np.float32).tiny)   # smallest normal float32
+
+
+def _subnormal(arr: np.ndarray) -> bool:
+    """XLA's CPU/TPU paths may flush subnormal float32 to zero (FTZ/DAZ)
+    while numpy preserves them — values in (0, tiny) break bit-parity."""
+    a = np.abs(arr, dtype=np.float32)
+    return bool(np.any((a > 0) & (a < _F32_TINY)))
+
+
+# ---------------------------------------------------------------------------
+# Engine accounting
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Cumulative per-engine accounting (mirrored into ``WorkerMetrics``)."""
+
+    fused_features: int = 0      # op executions served by a fused kernel
+    fallback_features: int = 0   # op executions served by per-feature numpy
+    demoted_features: int = 0    # fused-eligible ops demoted at run time
+    kernel_launches: int = 0     # fused pallas_calls + per-feature op calls
+    fused_s: float = 0.0         # transform_s attribution: fused path
+    fallback_s: float = 0.0      # transform_s attribution: numpy path
+
+
+# ---------------------------------------------------------------------------
+# Compilation: transform DAG -> waves of packed fused ops + fallback steps
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedOp:
+    """One packed column of a fused wave: op code + int32 params (float
+    params ride as float32 bit patterns, like in the kernel)."""
+
+    spec: TransformSpec
+    code: int
+    p0: int
+    p1: int
+    kind: str                              # "sparse" | "dense" | "dense_bucket"
+    borders: Optional[np.ndarray] = None   # (nb,) float32, BUCKETIZE_F only
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedWave:
+    ops: Tuple[FusedOp, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class FallbackStep:
+    spec: TransformSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledPlan:
+    """Ordered execution steps: each step is a FusedWave (one kernel
+    launch) or a FallbackStep (one per-feature numpy call)."""
+
+    steps: Tuple[Union[FusedWave, FallbackStep], ...]
+
+    @property
+    def fused_ops(self) -> List[FusedOp]:
+        return [op for s in self.steps if isinstance(s, FusedWave) for op in s.ops]
+
+    @property
+    def fallback_specs(self) -> List[TransformSpec]:
+        return [s.spec for s in self.steps if isinstance(s, FallbackStep)]
+
+
+def _f32_exact(x: Any) -> bool:
+    try:
+        x = float(x)
+    except (TypeError, ValueError):
+        return False
+    # NaN params stay on the numpy path: XLA min/max NaN propagation
+    # differs from numpy's.  (NaN != NaN, so the equality rejects it.)
+    f = float(np.float32(x))
+    return f == x
+
+
+def _f32_bits(x: float) -> int:
+    return int(np.float32(x).view(np.int32))
+
+
+def _bits_f32(b: int) -> float:
+    return float(np.int32(b).view(np.float32))
+
+
+def _try_fuse(spec: TransformSpec) -> Optional[FusedOp]:
+    """Static fusability: can this spec be expressed as one fused-kernel
+    column with bit-exact numpy parity?  Returns None for fallback."""
+    kw = spec.kwargs
+    if len(spec.inputs) != 1:
+        return None
+    if spec.op == "SigridHash" and set(kw) == {"salt", "max_value"}:
+        salt, mv = kw["salt"], kw["max_value"]
+        if isinstance(salt, (int, np.integer)) and isinstance(mv, (int, np.integer)) \
+                and 0 <= salt <= _I32_MAX and 1 <= mv <= _I32_MAX:
+            return FusedOp(spec, OP_SIGRID_HASH, int(salt), int(mv), "sparse")
+    elif spec.op == "PositiveModulus" and set(kw) == {"m"}:
+        m = kw["m"]
+        if isinstance(m, (int, np.integer)) and 1 <= m <= _I32_MAX:
+            return FusedOp(spec, OP_POSITIVE_MODULUS, int(m), int(m), "sparse")
+    elif spec.op == "Clamp" and set(kw) == {"lo", "hi"}:
+        lo, hi = kw["lo"], kw["hi"]
+        if (
+            _f32_exact(lo) and _f32_exact(hi)
+            and not _subnormal(np.array([lo, hi], np.float32))
+        ):
+            return FusedOp(
+                spec, OP_CLAMP_F, _f32_bits(float(lo)), _f32_bits(float(hi)),
+                "dense",
+            )
+    elif spec.op == "Bucketize" and set(kw) == {"borders"}:
+        b = np.asarray(kw["borders"], np.float32)
+        if (
+            b.ndim == 1 and 1 <= b.size <= _MAX_BORDERS
+            and np.all(np.isfinite(b)) and np.all(np.diff(b) >= 0)
+            and not _subnormal(b)
+        ):
+            return FusedOp(spec, OP_BUCKETIZE_F, 0, 0, "dense_bucket", b)
+    return None
+
+
+def compile_pipeline(
+    specs: Sequence[TransformSpec],
+) -> CompiledPlan:
+    """Greedy level scheduling: at every round, every not-yet-executed
+    fusable spec whose inputs are already materialized joins one fused
+    wave (one kernel launch); otherwise the next spec in topological
+    order runs as a per-feature fallback.  DAGs that reassign an output
+    key compile to pure fallback (wave reordering would change the
+    sequential-overwrite semantics of ``TransformPipeline``)."""
+    specs = list(specs)
+    # single-assignment check with read-before-overwrite detection: if a
+    # spec's output key was already read (by an earlier spec, or by itself)
+    # or already written, sequential execution order is load-bearing — an
+    # earlier reader must see the PRE-overwrite value, which wave
+    # reordering would destroy.  ``{outputs} & ({inputs} - {outputs})``
+    # is NOT sufficient: a later spec overwriting a raw batch key that an
+    # earlier spec reads leaves that key out of the external set entirely.
+    seen_inputs: set = set()
+    written: set = set()
+    for s in specs:
+        seen_inputs.update(s.inputs)       # reads happen before this write
+        if s.output in seen_inputs or s.output in written:
+            return CompiledPlan(tuple(FallbackStep(s) for s in specs))
+        written.add(s.output)
+    external = {i for s in specs for i in s.inputs} - written
+
+    fusable = {id(s): _try_fuse(s) for s in specs}
+    avail = set(external)
+    remaining = list(specs)
+    steps: List[Union[FusedWave, FallbackStep]] = []
+    while remaining:
+        # drain every ready fallback FIRST: postponing fusable ops until no
+        # fallback can run widens each wave (e.g. all FirstX feeds complete
+        # before their SigridHashes fuse into ONE launch).  Safe because
+        # single-assignment makes execution order irrelevant to results.
+        progressed = True
+        while progressed:
+            progressed = False
+            for s in list(remaining):
+                if fusable[id(s)] is None and all(i in avail for i in s.inputs):
+                    steps.append(FallbackStep(s))
+                    avail.add(s.output)
+                    remaining.remove(s)
+                    progressed = True
+        wave = [
+            s for s in remaining
+            if fusable[id(s)] is not None and all(i in avail for i in s.inputs)
+        ]
+        if not wave:
+            # nothing ready at all: an unsatisfiable input.  Preserve the
+            # sequential pipeline's behavior (KeyError at execution time).
+            steps.extend(FallbackStep(s) for s in remaining)
+            break
+        # split by row class: sparse columns pack nnz values (~rows x
+        # avg_len lanes) while dense columns pack one value per row —
+        # co-packing would pad every dense column to the tallest nnz and
+        # drag the borders compare over the tall tile.  Two well-shaped
+        # launches beat one badly-shaped one; amortization stays
+        # O(features) per launch.
+        sparse_ops = tuple(
+            fusable[id(s)] for s in wave if fusable[id(s)].kind == "sparse"
+        )
+        dense_ops = tuple(
+            fusable[id(s)] for s in wave if fusable[id(s)].kind != "sparse"
+        )
+        for ops in (sparse_ops, dense_ops):
+            if ops:
+                steps.append(FusedWave(ops))
+        for s in wave:
+            avail.add(s.output)
+            remaining.remove(s)
+    return CompiledPlan(tuple(steps))
+
+
+def decode_plan(plan: CompiledPlan) -> List[TransformSpec]:
+    """Reconstruct the fused specs from their packed op-code/param columns
+    — the round-trip witness that packing loses nothing (borders are
+    canonicalized to float32, the precision the kernel compares in)."""
+    out: List[TransformSpec] = []
+    for op in plan.fused_ops:
+        src = op.spec
+        if op.code == OP_SIGRID_HASH:
+            params = (("salt", op.p0), ("max_value", op.p1))
+        elif op.code == OP_POSITIVE_MODULUS:
+            params = (("m", op.p0),)
+        elif op.code == OP_CLAMP_F:
+            params = (("lo", _bits_f32(op.p0)), ("hi", _bits_f32(op.p1)))
+        elif op.code == OP_BUCKETIZE_F:
+            params = (("borders", op.borders),)
+        else:  # pragma: no cover - no other codes are emitted by _try_fuse
+            raise ValueError(f"unknown fused op code {op.code}")
+        out.append(TransformSpec(src.op, src.inputs, src.output, params))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Engines
+# ---------------------------------------------------------------------------
+
+
+class TransformEngine:
+    """Executes a session's transform DAG over a ColumnBatch."""
+
+    name = "base"
+
+    def __init__(self, pipeline: TransformPipeline):
+        self.pipeline = pipeline
+        self.stats = EngineStats()
+
+    def run(self, batch: ColumnBatch) -> Dict[str, Column]:
+        raise NotImplementedError
+
+    def __call__(self, batch: ColumnBatch) -> Dict[str, Column]:
+        return self.run(batch)
+
+    # -- shared helpers -----------------------------------------------------
+
+    @staticmethod
+    def _seed_env(batch: ColumnBatch) -> Dict[str, Column]:
+        env: Dict[str, Column] = {}
+        for fid, col in batch.dense.items():
+            env[f"f{fid}"] = col
+        for fid, col in batch.sparse.items():
+            env[f"f{fid}"] = col
+        return env
+
+    def _apply_fallback(self, spec: TransformSpec, env: Dict[str, Column]) -> None:
+        t0 = time.perf_counter()
+        fn = _OPS[spec.op]
+        env[spec.output] = fn(*[env[i] for i in spec.inputs], **spec.kwargs)
+        self.stats.fallback_s += time.perf_counter() - t0
+        self.stats.fallback_features += 1
+        self.stats.kernel_launches += 1
+
+
+class NumpyEngine(TransformEngine):
+    """Per-feature reference execution — one vectorized numpy call per
+    spec, each accounted as one kernel launch (the per-feature dispatch
+    regime of §7.2)."""
+
+    name = "numpy"
+
+    def run(self, batch: ColumnBatch) -> Dict[str, Column]:
+        env = self._seed_env(batch)
+        for spec in self.pipeline.specs:
+            self._apply_fallback(spec, env)
+        return env
+
+
+class PallasEngine(TransformEngine):
+    """Wave-fused execution via ``kernels.fused_transform``.
+
+    ``row_quantum`` pads the packed tile's row count up to a multiple, so
+    ragged stripe sizes reuse a handful of compiled kernel shapes instead
+    of recompiling per batch (pad lanes compute garbage that is sliced
+    away on unpack).
+
+    ``use_pallas`` is the wave dispatch (the ``repro.kernels`` contract):
+    ``None`` (default) runs the compiled Pallas kernel on TPU and the
+    XLA-compiled static-codes oracle elsewhere — the fast fused path for
+    whatever backend is present, so ``engine="pallas"`` never regresses a
+    CPU deployment into emulation.  ``True`` always runs the Pallas
+    kernel — compiled on TPU, **interpret mode** off-TPU (bit-accurate
+    but emulation-slow: how the differential suite validates the kernel
+    on CPU).  All paths compute identical bits, so the engine stays
+    byte-compatible with ``NumpyEngine`` either way.
+    """
+
+    name = "pallas"
+
+    def __init__(
+        self,
+        pipeline: TransformPipeline,
+        block_rows: int = 256,
+        block_cols: int = 512,
+        row_quantum: int = 512,
+        use_pallas: Optional[bool] = None,
+    ):
+        super().__init__(pipeline)
+        self.plan = compile_pipeline(pipeline.specs)
+        self.block_rows = block_rows
+        self.block_cols = block_cols
+        self.row_quantum = max(1, row_quantum)
+        self.use_pallas = use_pallas
+
+    def run(self, batch: ColumnBatch) -> Dict[str, Column]:
+        env = self._seed_env(batch)
+        for step in self.plan.steps:
+            if isinstance(step, FallbackStep):
+                self._apply_fallback(step.spec, env)
+            else:
+                self._run_wave(step, env)
+        return env
+
+    # -- wave execution -----------------------------------------------------
+
+    def _pack_column(self, fop: FusedOp, col: Column) -> Optional[np.ndarray]:
+        """Return this op's input as int32-assignable lanes (int64 sparse
+        ids wrap to their low 32 bits on assignment; dense float32 rides
+        as bit patterns), or None to demote the op to the numpy fallback."""
+        if fop.kind == "sparse":
+            if not isinstance(col, SparseColumn):
+                return None
+            v = col.values
+            if fop.code == OP_POSITIVE_MODULUS and v.size and (
+                v.min() < _I32_MIN or v.max() > _I32_MAX
+            ):
+                return None      # int32 wrap would diverge from int64 numpy
+            # SigridHash truncates to the low 32 bits on both paths, so
+            # any int64 id packs exactly (setitem wrap == astype wrap).
+            return v
+        if not isinstance(col, np.ndarray) or col.ndim != 1:
+            return None
+        if fop.kind == "dense" and col.dtype != np.float32:
+            return None          # f64 clamp-then-cast can diverge from f32
+        v32 = np.nan_to_num(col, nan=0.0).astype(np.float32)
+        if _subnormal(v32):
+            return None          # XLA flush-to-zero would diverge from numpy
+        return v32.view(np.int32)
+
+    def _run_wave(self, wave: FusedWave, env: Dict[str, Column]) -> None:
+        t0 = time.perf_counter()
+        entries: List[Tuple[FusedOp, Column, np.ndarray]] = []
+        demoted: List[FusedOp] = []
+        for fop in wave.ops:
+            col = env[fop.spec.inputs[0]]
+            packed = self._pack_column(fop, col)
+            if packed is None:
+                demoted.append(fop)
+            else:
+                entries.append((fop, col, packed))
+
+        if entries:
+            rows = max(len(p) for _, _, p in entries)
+            feats = len(entries)
+            if rows == 0:
+                out32 = np.zeros((feats, 0), np.int32)
+            else:
+                # features-major packing: one contiguous row per feature
+                # (fast fills; int64 ids wrap to their low 32 bits on
+                # assignment, matching the kernel's lane truncation)
+                q = self.row_quantum
+                rows_pad = -(-rows // q) * q
+                mat = np.zeros((feats, rows_pad), np.int32)
+                codes = np.zeros(feats, np.int32)
+                p0 = np.zeros(feats, np.int32)
+                p1 = np.zeros(feats, np.int32)
+                nb = max(
+                    [f.borders.size for f, _, _ in entries if f.borders is not None],
+                    default=1,
+                )
+                borders = np.full((feats, nb), np.inf, np.float32)
+                for j, (fop, _, packed) in enumerate(entries):
+                    mat[j, : len(packed)] = packed
+                    codes[j] = fop.code
+                    p0[j] = fop.p0
+                    p1[j] = fop.p1
+                    if fop.borders is not None:
+                        borders[j, : fop.borders.size] = fop.borders
+                out32 = self._launch(mat, codes, p0, p1, borders)
+            self.stats.kernel_launches += 1
+            self.stats.fused_features += feats
+            # vectorized unpack: at most one widening cast for the whole
+            # wave; per-feature outputs are contiguous row views
+            out64 = (
+                out32.astype(np.int64)
+                if any(f.kind != "dense" for f, _, _ in entries) else None
+            )
+            for j, (fop, col, packed) in enumerate(entries):
+                env[fop.spec.output] = self._unpack(
+                    fop, col, out32, out64, j, len(packed)
+                )
+            self.stats.fused_s += time.perf_counter() - t0
+
+        for fop in demoted:
+            self.stats.demoted_features += 1
+            self._apply_fallback(fop.spec, env)
+
+    def _launch(self, mat, codes, p0, p1, borders) -> np.ndarray:
+        """Run one wave over the (features, rows) packed tile; returns the
+        transformed tile in the same layout."""
+        import jax.numpy as jnp
+
+        from repro.kernels import ops as kops
+
+        use = kops._on_tpu() if self.use_pallas is None else self.use_pallas
+        if use:
+            # the Pallas kernel tiles (rows, features) with features on
+            # the 128-lane minor axis; transposes happen device-side
+            out = kops.fused_transform(
+                jnp.asarray(mat).T, jnp.asarray(codes), jnp.asarray(p0),
+                jnp.asarray(p1), jnp.asarray(borders),
+                block_rows=self.block_rows, block_cols=self.block_cols,
+                use_pallas=True,
+            )
+            return np.ascontiguousarray(np.asarray(out).T)
+        # oracle dispatch: the wave's op codes are known at compile time,
+        # so the static-codes oracle skips every absent candidate branch
+        # and computes directly in the packing layout (no transposes)
+        out = _static_oracle()(
+            jnp.asarray(mat), tuple(int(c) for c in codes),
+            jnp.asarray(p0), jnp.asarray(p1), jnp.asarray(borders),
+            features_major=True,
+        )
+        return np.asarray(out)
+
+    @staticmethod
+    def _unpack(
+        fop: FusedOp, col: Column,
+        out32: np.ndarray, out64: Optional[np.ndarray], j: int, n: int,
+    ) -> Column:
+        if fop.kind == "sparse":
+            return SparseColumn(
+                offsets=col.offsets, values=out64[j, :n], scores=col.scores,
+            )
+        if fop.kind == "dense":        # Clamp: float32 bits back to floats
+            return out32[j, :n].view(np.float32)
+        # dense_bucket: one bucket id per row, arange offsets — exactly
+        # the transforms.bucketize output shape
+        return SparseColumn(
+            offsets=np.arange(n + 1, dtype=np.int64),
+            values=out64[j, :n], scores=None,
+        )
+
+
+_STATIC_ORACLE = None
+
+
+def _static_oracle():
+    """Lazily-jitted ``ref.fused_transform_static`` (op codes static)."""
+    global _STATIC_ORACLE
+    if _STATIC_ORACLE is None:
+        import jax
+
+        from repro.kernels import ref
+
+        _STATIC_ORACLE = jax.jit(
+            ref.fused_transform_static,
+            static_argnums=(1,), static_argnames=("features_major",),
+        )
+    return _STATIC_ORACLE
+
+
+ENGINES = {"numpy": NumpyEngine, "pallas": PallasEngine}
+
+
+def make_engine(
+    engine: Union[str, TransformEngine, None],
+    pipeline: TransformPipeline,
+) -> TransformEngine:
+    """Resolve an engine choice (name, instance, or factory) for one
+    exclusive owner (engines accumulate stats; don't share instances
+    across workers)."""
+    if engine is None:
+        return NumpyEngine(pipeline)
+    if isinstance(engine, TransformEngine):
+        return engine
+    if isinstance(engine, str):
+        try:
+            return ENGINES[engine](pipeline)
+        except KeyError:
+            raise ValueError(
+                f"unknown transform engine {engine!r}; "
+                f"expected one of {sorted(ENGINES)}"
+            ) from None
+    return engine(pipeline)      # factory callable

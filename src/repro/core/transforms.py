@@ -24,7 +24,7 @@ Column = Union[np.ndarray, SparseColumn]
 
 
 # ---------------------------------------------------------------------------
-# Hashing (SigridHash) — splitmix64-style mix, vectorized
+# Hashing (SigridHash) — 32-bit multiply-xor-shift mix, vectorized
 # ---------------------------------------------------------------------------
 
 
@@ -39,12 +39,34 @@ def _mix64(x: np.ndarray) -> np.ndarray:
     return x
 
 
+def _mix32(x: np.ndarray) -> np.ndarray:
+    """The canonical SigridHash mixer: two multiply-xor-shift rounds on
+    uint32 lanes.  Bit-for-bit identical to ``repro.kernels.ref._mix64``
+    and the Pallas ``_hash_u32`` — TPU vector lanes are 32-bit, so the
+    numpy reference and the fused kernel share one hash so engines can
+    produce byte-identical batches (and TensorCache entries stay
+    engine-agnostic)."""
+    x = x.astype(np.uint32, copy=True)
+    with np.errstate(over="ignore"):
+        x ^= x >> np.uint32(16)
+        x *= np.uint32(0x7FEB352D)
+        x ^= x >> np.uint32(15)
+        x *= np.uint32(0x846CA68B)
+        x ^= x >> np.uint32(16)
+    return x
+
+
 def sigrid_hash(col: SparseColumn, salt: int, max_value: int) -> SparseColumn:
-    """Hash-normalize a sparse id list into [0, max_value)."""
-    h = _mix64(col.values.astype(np.uint64) ^ np.uint64(salt))
+    """Hash-normalize a sparse id list into [0, max_value).
+
+    Ids and salt are truncated to their low 32 bits before mixing (the
+    lane-width contract shared with ``kernels.fused_transform``);
+    ``max_value`` must be in ``[1, 2**32)``.
+    """
+    h = _mix32(col.values.astype(np.uint32) ^ np.uint32(salt & 0xFFFFFFFF))
     return SparseColumn(
         offsets=col.offsets,
-        values=(h % np.uint64(max_value)).astype(np.int64),
+        values=(h % np.uint32(max_value)).astype(np.int64),
         scores=col.scores,
     )
 
@@ -84,8 +106,15 @@ def get_local_hour(col: np.ndarray, tz_offset_s: int = 0) -> np.ndarray:
 
 
 def bucketize(col: np.ndarray, borders: np.ndarray) -> SparseColumn:
-    """Feature generation: dense value -> categorical bucket id (sparse)."""
-    idx = np.searchsorted(borders, np.nan_to_num(col, nan=0.0)).astype(np.int64)
+    """Feature generation: dense value -> categorical bucket id (sparse).
+
+    Comparisons happen in float32 (borders and values are both cast), the
+    pipeline-wide dense precision — and the lane dtype of the fused Pallas
+    kernel, which must reproduce these semantics bit-for-bit.
+    """
+    b32 = np.asarray(borders, np.float32)
+    v32 = np.nan_to_num(col, nan=0.0).astype(np.float32)
+    idx = np.searchsorted(b32, v32).astype(np.int64)
     n = len(col)
     return SparseColumn(
         offsets=np.arange(n + 1, dtype=np.int64), values=idx, scores=None

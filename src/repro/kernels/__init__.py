@@ -1,3 +1,35 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the DSI hot spots (§7.2) + their dispatch layer.
+
+Public API — import from here (``from repro.kernels import sigrid_hash``):
+every op is a jit'd wrapper with a ``use_pallas`` knob implementing one
+dispatch contract:
+
+  * ``use_pallas=None`` (default): the Pallas kernel **compiled** on TPU;
+    the pure-jnp oracle (``repro.kernels.ref``) everywhere else — the
+    fast correct path for whatever backend is present.
+  * ``use_pallas=True``: always the Pallas kernel — compiled on TPU,
+    **interpret mode** off-TPU (slow, bit-accurate; how CI validates the
+    kernels on CPU).
+  * ``use_pallas=False``: always the jnp oracle.
+
+The per-kernel modules (``fused_transform``, ``sigrid_hash``, ...) hold
+the raw ``pallas_call`` implementations; ``repro.core.engine`` builds the
+DPP worker's fused TransformEngine on top of ``fused_transform``.
+"""
+from repro.kernels.ops import (
+    bucketize,
+    embedding_bag,
+    flash_attention,
+    fused_transform,
+    sigrid_hash,
+    ssd_chunk_forward,
+)
+
+__all__ = [
+    "bucketize",
+    "embedding_bag",
+    "flash_attention",
+    "fused_transform",
+    "sigrid_hash",
+    "ssd_chunk_forward",
+]

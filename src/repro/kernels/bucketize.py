@@ -17,8 +17,10 @@ from jax.experimental import pallas as pl
 def _kernel(vals_ref, borders_ref, out_ref):
     v = vals_ref[...]                              # (br, bc) f32
     borders = borders_ref[...]                     # (1, nb) f32
-    # count borders <= v per element: (br, bc, nb) compare, sum over nb
-    cmp = v[:, :, None] >= borders[0][None, None, :]
+    # count borders strictly < v per element ((br, bc, nb) compare, sum over
+    # nb) == np.searchsorted(borders, v) side='left' — the transforms.py
+    # reference semantics
+    cmp = v[:, :, None] > borders[0][None, None, :]
     out_ref[...] = jnp.sum(cmp, axis=-1).astype(jnp.int32)
 
 

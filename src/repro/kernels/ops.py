@@ -9,6 +9,10 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.bucketize import bucketize as _bucketize_pallas
+
+# the fused oracle is hot enough (whole transform waves) to deserve XLA
+# compilation rather than eager per-op dispatch
+_fused_ref = jax.jit(ref.fused_transform)
 from repro.kernels.embedding_bag import embedding_bag as _embag_pallas
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.fused_transform import fused_transform as _fused_pallas
@@ -34,11 +38,17 @@ def bucketize(values, borders, *, use_pallas: Optional[bool] = None):
     return ref.bucketize(values, borders)
 
 
-def fused_transform(ids, op_codes, param0, param1, *, use_pallas: Optional[bool] = None):
+def fused_transform(ids, op_codes, param0, param1, borders=None, *,
+                    block_rows: int = 256, block_cols: int = 512,
+                    use_pallas: Optional[bool] = None):
     use = _on_tpu() if use_pallas is None else use_pallas
     if use:
-        return _fused_pallas(ids, op_codes, param0, param1, interpret=not _on_tpu())
-    return ref.fused_transform(ids, op_codes, param0, param1)
+        return _fused_pallas(
+            ids, op_codes, param0, param1, borders,
+            block_rows=block_rows, block_cols=block_cols,
+            interpret=not _on_tpu(),
+        )
+    return _fused_ref(ids, op_codes, param0, param1, borders)
 
 
 def embedding_bag(table, ids, mask, *, use_pallas: Optional[bool] = None):

@@ -27,41 +27,130 @@ def sigrid_hash(ids: jax.Array, salt: int, max_value: int) -> jax.Array:
 
 
 def bucketize(values: jax.Array, borders: jax.Array) -> jax.Array:
-    """values: f32 (any shape); borders: (nb,) sorted -> bucket idx int32."""
+    """values: f32 (any shape); borders: (nb,) sorted -> bucket idx int32.
+
+    Counts borders strictly below the value — ``np.searchsorted(borders,
+    v)`` (side='left'), the semantics of ``repro.core.transforms.bucketize``.
+    """
     return jnp.sum(
-        values[..., None] >= borders, axis=-1, dtype=jnp.int32
+        values[..., None] > borders, axis=-1, dtype=jnp.int32
     )
 
 
-# fused multi-feature transform op codes
+# fused multi-feature transform op codes (mirrors kernels.fused_transform)
 OP_IDENTITY = 0
 OP_SIGRID_HASH = 1
 OP_POSITIVE_MODULUS = 2
 OP_CLAMP = 3
 OP_BUCKETIZE = 4
+OP_CLAMP_F = 5
+OP_BUCKETIZE_F = 6
 
 
 def fused_transform(
     ids: jax.Array,        # (rows, features) int32 packed feature matrix
     op_codes: jax.Array,   # (features,) int32
-    param0: jax.Array,     # (features,) int32  (salt / modulus / lo / n_borders)
-    param1: jax.Array,     # (features,) int32  (max_value / hi / border_scale)
+    param0: jax.Array,     # (features,) int32  (salt / modulus / lo-bits)
+    param1: jax.Array,     # (features,) int32  (max_value / hi-bits / scale)
+    borders=None,          # (features, nb) f32 +inf-padded (BUCKETIZE_F)
 ) -> jax.Array:
     """Apply a per-feature op across a packed (rows, features) tile — the
-    paper's 'combine 1000 features into one kernel' insight (§7.2)."""
+    paper's 'combine 1000 features into one kernel' insight (§7.2).
+    Float-typed ops (CLAMP_F / BUCKETIZE_F) treat the lane as float32 bits."""
+    rows, feats = ids.shape
+    if borders is None:
+        borders = jnp.full((feats, 1), jnp.inf, jnp.float32)
     h = _mix64(ids.astype(jnp.uint32) ^ param0[None, :].astype(jnp.uint32))
     out_hash = (h % jnp.maximum(param1[None, :].astype(jnp.uint32), 1)).astype(jnp.int32)
     m = jnp.maximum(param1[None, :], 1)
-    out_mod = jnp.mod(jnp.mod(ids, m) + m, m)
+    # single floored mod: already in [0, m), and immune to the int32
+    # overflow a mod(mod+m, m) chain hits for m near 2^31
+    out_mod = jnp.mod(ids, m)
     out_clamp = jnp.clip(ids, param0[None, :], param1[None, :])
     # bucketize against a linear grid: idx = clip(floor((v - lo)/scale), 0, n)
     scale = jnp.maximum(param1[None, :], 1)
     out_bucket = jnp.clip((ids - param0[None, :]) // scale, 0, 255)
+    f = jax.lax.bitcast_convert_type(ids, jnp.float32)
+    lo = jax.lax.bitcast_convert_type(param0, jnp.float32)[None, :]
+    hi = jax.lax.bitcast_convert_type(param1, jnp.float32)[None, :]
+    out_clamp_f = jax.lax.bitcast_convert_type(jnp.clip(f, lo, hi), jnp.int32)
+    out_bucket_f = jnp.sum(
+        f[:, :, None] > borders[None, :, :], axis=-1, dtype=jnp.int32
+    )
     code = op_codes[None, :]
     out = jnp.where(code == OP_SIGRID_HASH, out_hash, ids)
     out = jnp.where(code == OP_POSITIVE_MODULUS, out_mod, out)
     out = jnp.where(code == OP_CLAMP, out_clamp, out)
     out = jnp.where(code == OP_BUCKETIZE, out_bucket, out)
+    out = jnp.where(code == OP_CLAMP_F, out_clamp_f, out)
+    out = jnp.where(code == OP_BUCKETIZE_F, out_bucket_f, out)
+    return out.astype(jnp.int32)
+
+
+def fused_transform_static(
+    ids: jax.Array,
+    op_codes,              # STATIC tuple[int, ...] of per-feature op codes
+    param0: jax.Array,
+    param1: jax.Array,
+    borders=None,
+    features_major: bool = False,     # STATIC: ids is (features, rows)
+) -> jax.Array:
+    """``fused_transform`` with compile-time op codes: only the branches
+    that actually occur are built, so an all-SigridHash wave costs one
+    hash pass instead of every candidate op tile-wide.  Identical bits to
+    ``fused_transform`` — the fast fused path when the wave dispatcher
+    compiles for CPU/GPU instead of launching the Pallas TPU kernel.
+
+    ``features_major=True`` computes in the engine's packing layout
+    ((features, rows), one contiguous row per feature) with no transpose
+    on either side of the call."""
+    ax = (slice(None), None) if features_major else (None, slice(None))
+    nf = ids.shape[0] if features_major else ids.shape[1]
+    present = set(int(c) for c in op_codes)
+    code = jnp.asarray(op_codes, jnp.int32)[ax]
+    out = ids
+    if OP_SIGRID_HASH in present:
+        h = _mix64(ids.astype(jnp.uint32) ^ param0[ax].astype(jnp.uint32))
+        hashed = (
+            h % jnp.maximum(param1[ax].astype(jnp.uint32), 1)
+        ).astype(jnp.int32)
+        out = jnp.where(code == OP_SIGRID_HASH, hashed, out)
+    if OP_POSITIVE_MODULUS in present:
+        out = jnp.where(
+            code == OP_POSITIVE_MODULUS,
+            jnp.mod(ids, jnp.maximum(param1[ax], 1)), out,
+        )
+    if OP_CLAMP in present:
+        out = jnp.where(
+            code == OP_CLAMP, jnp.clip(ids, param0[ax], param1[ax]), out,
+        )
+    if OP_BUCKETIZE in present:
+        scale = jnp.maximum(param1[ax], 1)
+        out = jnp.where(
+            code == OP_BUCKETIZE,
+            jnp.clip((ids - param0[ax]) // scale, 0, 255), out,
+        )
+    if OP_CLAMP_F in present or OP_BUCKETIZE_F in present:
+        f = jax.lax.bitcast_convert_type(ids, jnp.float32)
+        if OP_CLAMP_F in present:
+            lo = jax.lax.bitcast_convert_type(param0, jnp.float32)[ax]
+            hi = jax.lax.bitcast_convert_type(param1, jnp.float32)[ax]
+            out = jnp.where(
+                code == OP_CLAMP_F,
+                jax.lax.bitcast_convert_type(jnp.clip(f, lo, hi), jnp.int32),
+                out,
+            )
+        if OP_BUCKETIZE_F in present:
+            if borders is None:
+                borders = jnp.full((nf, 1), jnp.inf, jnp.float32)
+            cmp = (
+                f[:, :, None] > borders[:, None, :] if features_major
+                else f[:, :, None] > borders[None, :, :]
+            )
+            out = jnp.where(
+                code == OP_BUCKETIZE_F,
+                jnp.sum(cmp, axis=-1, dtype=jnp.int32), out,
+            )
     return out.astype(jnp.int32)
 
 

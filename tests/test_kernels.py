@@ -40,6 +40,31 @@ def test_fused_transform_sweep(rows, feats):
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.parametrize("rows,feats,nb", [(16, 96, 7), (50, 130, 63)])
+def test_fused_transform_float_ops_sweep(rows, feats, nb):
+    """CLAMP_F / BUCKETIZE_F lanes: float32 bits + per-feature borders."""
+    rng = np.random.default_rng(3)
+    codes = rng.integers(0, 7, feats).astype(np.int32)
+    ids = rng.integers(-(1 << 20), 1 << 20, (rows, feats)).astype(np.int32)
+    p0 = rng.integers(1, 1000, feats).astype(np.int32)
+    p1 = rng.integers(1, 100000, feats).astype(np.int32)
+    fmask = np.isin(codes, (5, 6))
+    ids[:, fmask] = (
+        rng.normal(0, 3, (rows, int(fmask.sum()))).astype(np.float32).view(np.int32)
+    )
+    p0[codes == 5] = np.float32(-1.5).view(np.int32)
+    p1[codes == 5] = np.float32(2.5).view(np.int32)
+    borders = np.full((feats, nb), np.inf, np.float32)
+    bmask = codes == 6
+    borders[bmask] = np.sort(
+        rng.normal(0, 2, (int(bmask.sum()), nb)).astype(np.float32), axis=1
+    )
+    args = [jnp.asarray(x) for x in (ids, codes, p0, p1, borders)]
+    a = ops.fused_transform(*args, use_pallas=True)
+    b = ref.fused_transform(*args)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 @pytest.mark.parametrize("v,e,b,l", [(64, 8, 4, 4), (512, 64, 8, 16), (128, 128, 3, 7)])
 def test_embedding_bag_sweep(v, e, b, l):
     table = jax.random.normal(KEY, (v, e), jnp.float32)
@@ -78,6 +103,127 @@ def test_ssd_chunk_kernel_sweep(bh, s, p, n, chunk):
     yk = ops.ssd_chunk_forward(x, dt, a, b_, c_, chunk=chunk, use_pallas=True)
     yr = ref.ssd_chunk_forward(x, dt, a, b_, c_)
     np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), atol=5e-4, rtol=1e-3)
+
+
+def test_fused_transform_static_matches_general():
+    """Static-codes oracle == general oracle, in both tile layouts."""
+    rng = np.random.default_rng(4)
+    rows, feats, nb = 40, 70, 5
+    codes = rng.integers(0, 7, feats).astype(np.int32)
+    ids = rng.integers(-(1 << 20), 1 << 20, (rows, feats)).astype(np.int32)
+    p0 = rng.integers(1, 100, feats).astype(np.int32)
+    p1 = rng.integers(1, 1000, feats).astype(np.int32)
+    fmask = np.isin(codes, (5, 6))
+    ids[:, fmask] = (
+        rng.normal(0, 3, (rows, int(fmask.sum()))).astype(np.float32).view(np.int32)
+    )
+    borders = np.full((feats, nb), np.inf, np.float32)
+    borders[codes == 6] = np.sort(
+        rng.normal(0, 2, (int((codes == 6).sum()), nb)).astype(np.float32), axis=1
+    )
+    args = [jnp.asarray(x) for x in (ids, codes, p0, p1, borders)]
+    general = np.asarray(ref.fused_transform(*args))
+    static = np.asarray(ref.fused_transform_static(
+        args[0], tuple(int(c) for c in codes), args[2], args[3], args[4]
+    ))
+    np.testing.assert_array_equal(general, static)
+    static_fm = np.asarray(ref.fused_transform_static(
+        args[0].T, tuple(int(c) for c in codes), args[2], args[3], args[4],
+        features_major=True,
+    ))
+    np.testing.assert_array_equal(general, static_fm.T)
+
+
+# -- ops.py dispatch contract (off-TPU routing) ------------------------------
+
+
+def test_ops_dispatch_routes_off_tpu(monkeypatch):
+    """``use_pallas=None`` and ``False`` take the jnp oracle off-TPU;
+    ``True`` takes the Pallas kernel (interpret mode) and never the oracle."""
+    assert jax.default_backend() != "tpu"   # conftest pins JAX_PLATFORMS=cpu
+    calls = []
+    real = ref.sigrid_hash
+    monkeypatch.setattr(ref, "sigrid_hash",
+                        lambda *a, **k: calls.append("ref") or real(*a, **k))
+    ids = jnp.zeros((8, 128), jnp.int32)
+    ops.sigrid_hash(ids, 1, 10, use_pallas=None)
+    assert calls == ["ref"]
+    ops.sigrid_hash(ids, 1, 10, use_pallas=False)
+    assert calls == ["ref", "ref"]
+    out = ops.sigrid_hash(ids, 1, 10, use_pallas=True)
+    assert calls == ["ref", "ref"]          # pallas path: oracle untouched
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(real(ids, 1, 10)))
+
+
+def test_kernels_package_exports_public_api():
+    import repro.kernels as K
+
+    for name in K.__all__:
+        assert callable(getattr(K, name)), name
+    assert set(K.__all__) >= {
+        "sigrid_hash", "bucketize", "fused_transform",
+        "embedding_bag", "flash_attention", "ssd_chunk_forward",
+    }
+
+
+# -- ref.py oracle vs the numpy transform reference --------------------------
+
+
+def test_ref_sigrid_hash_matches_numpy_transforms():
+    from repro.core import transforms as T
+    from repro.core.schema import SparseColumn
+
+    vals = np.array(
+        [-1, 0, 1, 7, -(2 ** 31), 2 ** 31 - 1, 2 ** 40 + 3, -(2 ** 40)], np.int64
+    )
+    col = SparseColumn(
+        offsets=np.array([0, len(vals)], np.int64), values=vals
+    )
+    for salt, mv in [(0, 1), (13, 1000), (2 ** 31 - 1, 2 ** 31 - 1)]:
+        np_out = T.sigrid_hash(col, salt, mv).values
+        ref_out = ref.sigrid_hash(
+            jnp.asarray(vals.astype(np.int32)).reshape(1, -1), salt, mv
+        )
+        np.testing.assert_array_equal(
+            np_out, np.asarray(ref_out).ravel().astype(np.int64)
+        )
+
+
+def test_ref_bucketize_matches_numpy_transforms():
+    from repro.core import transforms as T
+
+    borders = np.array([-1.0, 0.0, 0.0, 1.0], np.float32)
+    vals = np.array([-2.0, -1.0, -0.5, 0.0, 0.5, 1.0, 2.0], np.float32)
+    np_out = T.bucketize(vals, borders).values
+    ref_out = ref.bucketize(jnp.asarray(vals), jnp.asarray(borders))
+    np.testing.assert_array_equal(np_out, np.asarray(ref_out).astype(np.int64))
+
+
+# -- ragged-tail tiles (rows/cols not a multiple of the block size) ----------
+
+
+@pytest.mark.parametrize("rows,cols,br,bc", [(37, 70, 16, 64), (130, 5, 128, 4)])
+def test_bucketize_ragged_tail_tiles(rows, cols, br, bc):
+    from repro.kernels.bucketize import bucketize as bucketize_pallas
+
+    vals = jax.random.normal(KEY, (rows, cols), jnp.float32) * 2
+    borders = jnp.sort(jax.random.normal(jax.random.PRNGKey(20), (9,)))
+    a = bucketize_pallas(vals, borders, block_rows=br, block_cols=bc,
+                         interpret=True)
+    b = ref.bucketize(vals, borders)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("v,e,b,l", [(33, 17, 5, 3), (7, 9, 1, 1)])
+def test_embedding_bag_ragged_tail_tiles(v, e, b, l):
+    table = jax.random.normal(KEY, (v, e), jnp.float32)
+    ids = jax.random.randint(jax.random.PRNGKey(21), (b, l), 0, v, jnp.int32)
+    mask = (jax.random.uniform(jax.random.PRNGKey(22), (b, l)) > 0.3).astype(
+        jnp.float32
+    )
+    a = ops.embedding_bag(table, ids, mask, use_pallas=True)
+    bb = ref.embedding_bag(table, ids, mask)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bb), atol=1e-5)
 
 
 def test_ssd_chunk_kernel_matches_model_ssd():
