@@ -6,14 +6,22 @@ Prints ``name,us_per_call,derived`` CSV rows.
 
 ``--quick`` is the CI smoke path: every section module is imported (so
 benchmarks can never silently rot), and sections whose ``run`` accepts a
-``quick`` flag are executed with a scaled-down workload.
+``quick`` flag are executed with a scaled-down workload.  Quick runs also
+write ``BENCH_quick.json`` next to this file — per-section metric rows
+plus wall-clock timestamps — so CI artifacts and trend tooling get a
+machine-readable record instead of scraping stdout.
 """
 from __future__ import annotations
 
 import argparse
 import inspect
+import json
 import sys
+import time
 import traceback
+from pathlib import Path
+
+from benchmarks import common
 
 SECTIONS = [
     "storage",          # Tables 3/4/5/6
@@ -41,22 +49,49 @@ def main() -> None:
     only = set(args.only.split(",")) if args.only else None
 
     failures = []
+    report = {
+        "started_at": time.time(),
+        "mode": "quick" if args.quick else "full",
+        "sections": {},
+    }
     for section in SECTIONS:
         if only and section not in only:
             continue
         print(f"# === {section} ===")
+        row_mark = len(common.ROWS)
+        t0 = time.time()
+        status = "ok"
         try:
             mod = __import__(f"benchmarks.bench_{section}", fromlist=["run"])
             if args.quick:
                 if "quick" in inspect.signature(mod.run).parameters:
                     mod.run(quick=True)
                 else:
+                    status = "import-only"
                     print(f"# {section}: import-only (no quick mode)")
             else:
                 mod.run()
         except Exception as e:  # keep going; report at the end
             failures.append((section, e))
+            status = f"failed: {e}"
             traceback.print_exc()
+        report["sections"][section] = {
+            "status": status,
+            "started_at": t0,
+            "elapsed_s": time.time() - t0,
+            # the rows this section emit()-ed, keyed like the CSV output
+            "metrics": [
+                {"name": n, "us_per_call": us, "derived": d}
+                for n, us, d in common.ROWS[row_mark:]
+            ],
+        }
+    report["finished_at"] = time.time()
+    if args.quick:
+        out = Path(__file__).resolve().parent.parent / "BENCH_quick.json"
+        out.write_text(json.dumps(report, indent=2) + "\n")
+        print(f"# wrote {out.name}: {len(report['sections'])} section(s), "
+              f"{sum(len(s['metrics']) for s in report['sections'].values())} "
+              "metric row(s)")
     if failures:
         print(f"# FAILED sections: {[s for s, _ in failures]}")
         sys.exit(1)

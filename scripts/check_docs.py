@@ -1,19 +1,22 @@
 #!/usr/bin/env python
-"""Doc-drift gate: every repo path and `python -m` command the docs
-mention must actually exist.
+"""Doc-drift gate: every repo path, `python -m` command, and analysis
+rule id the docs mention must actually exist.
 
 Scans README.md and docs/*.md for
 
   * `src/repro/...`, `benchmarks/...`, `tests/...`, `examples/...`,
     `scripts/...`, `docs/...` path references (with or without backticks;
-    trailing `:line`, wildcards, and `...` ellipses are tolerated), and
-  * `python -m <module>` / `python <script.py>` invocations,
+    trailing `:line`, wildcards, and `...` ellipses are tolerated),
+  * `python -m <module>` / `python <script.py>` invocations, and
+  * `REPRO-<X><NNN>` rule ids, which must be registered in
+    ``repro.analysis.all_rules()`` — so the rule catalog in
+    docs/static_analysis.md can never drift from the checkers,
 
 then verifies each path exists and each module resolves under
 `PYTHONPATH=src` — so a rename or deletion can never leave the
 documentation silently pointing at nothing.
 
-  PYTHONPATH=src python scripts/check_docs.py
+  PYTHONPATH=src python scripts/check_docs.py [repo-root]
 """
 from __future__ import annotations
 
@@ -23,11 +26,6 @@ import sys
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
-# resolve modules the way the documented commands run them: from the repo
-# root with PYTHONPATH=src
-for p in (str(REPO), str(REPO / "src")):
-    if p not in sys.path:
-        sys.path.insert(0, p)
 
 PATH_RE = re.compile(
     r"(?<![\w/.-])((?:src/repro|benchmarks|tests|examples|scripts|docs)"
@@ -35,22 +33,25 @@ PATH_RE = re.compile(
 )
 MODULE_RE = re.compile(r"python\s+-m\s+([A-Za-z0-9_.]+)")
 SCRIPT_RE = re.compile(r"python\s+((?:[A-Za-z0-9_\-]+/)+[A-Za-z0-9_\-]+\.py)")
+RULE_RE = re.compile(r"\bREPRO-[A-Z]\d{3}\b")
 
 
-def _doc_files() -> list:
-    return [REPO / "README.md"] + sorted((REPO / "docs").glob("*.md"))
+def _doc_files(repo: Path) -> list:
+    readme = repo / "README.md"
+    return ([readme] if readme.is_file() else []) \
+        + sorted((repo / "docs").glob("*.md"))
 
 
-def _check_path(ref: str) -> bool:
+def _check_path(repo: Path, ref: str) -> bool:
     # tolerate wildcard ("bench_*.py") and ellipsis ("core/...") mentions:
     # they name a family, not a file — require at least one match
     ref = ref.rstrip("/").split(":", 1)[0]
     if ref.endswith("..."):
         ref = ref[: -len("...")].rstrip("/")
     if "*" in ref:
-        parent = REPO / ref.rsplit("/", 1)[0]
+        parent = repo / ref.rsplit("/", 1)[0]
         return parent.is_dir() and any(parent.glob(ref.rsplit("/", 1)[1]))
-    return (REPO / ref).exists()
+    return (repo / ref).exists()
 
 
 def _check_module(mod: str) -> bool:
@@ -60,15 +61,29 @@ def _check_module(mod: str) -> bool:
         return False
 
 
-def main() -> int:
+def _known_rules() -> set:
+    try:
+        from repro.analysis import all_rules
+        return set(all_rules())
+    except ImportError:
+        return set()
+
+
+def main(repo: Path = REPO) -> int:
+    # resolve modules the way the documented commands run them: from the
+    # repo root with PYTHONPATH=src
+    for p in (str(repo), str(repo / "src")):
+        if p not in sys.path:
+            sys.path.insert(0, p)
     failures = []
     checked = 0
-    for doc in _doc_files():
+    rules = _known_rules()
+    for doc in _doc_files(repo):
         text = doc.read_text()
-        rel = doc.relative_to(REPO)
+        rel = doc.relative_to(repo)
         for m in PATH_RE.finditer(text):
             checked += 1
-            if not _check_path(m.group(1)):
+            if not _check_path(repo, m.group(1)):
                 failures.append(f"{rel}: missing path  {m.group(1)}")
         for m in MODULE_RE.finditer(text):
             checked += 1
@@ -76,17 +91,24 @@ def main() -> int:
                 failures.append(f"{rel}: missing module python -m {m.group(1)}")
         for m in SCRIPT_RE.finditer(text):
             checked += 1
-            if not (REPO / m.group(1)).is_file():
+            if not (repo / m.group(1)).is_file():
                 failures.append(f"{rel}: missing script {m.group(1)}")
+        for rid in sorted(set(RULE_RE.findall(text))):
+            checked += 1
+            if rules and rid not in rules:
+                failures.append(
+                    f"{rel}: unknown analysis rule {rid} "
+                    "(not registered in repro.analysis)"
+                )
     if failures:
         print(f"doc drift: {len(failures)} stale reference(s):")
         for f in failures:
             print(f"  {f}")
         return 1
     print(f"doc drift: ok ({checked} references across "
-          f"{len(_doc_files())} docs)")
+          f"{len(_doc_files(repo))} docs)")
     return 0
 
 
 if __name__ == "__main__":
-    sys.exit(main())
+    sys.exit(main(Path(sys.argv[1]).resolve() if len(sys.argv) > 1 else REPO))

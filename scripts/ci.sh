@@ -1,10 +1,14 @@
 #!/usr/bin/env bash
-# Tier-1 gate: the whole suite + benchmark smoke, one command.
+# Tier-1 gate: the whole suite + invariant gate + benchmark smoke, one command.
 #   ./scripts/ci.sh [extra pytest args...]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+# invariant gate: lock discipline, clock injection, kernel parity,
+# metrics contract, thread hygiene (docs/static_analysis.md)
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.analysis
 # benchmark smoke: every bench module must import; quick-capable sections run
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --quick
-# doc drift: every path / python -m command the docs reference must exist
+# doc drift: every path / python -m command / REPRO rule id the docs
+# reference must exist
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/check_docs.py

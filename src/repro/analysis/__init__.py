@@ -1,0 +1,55 @@
+"""Repo-native static analysis + runtime sanitizers (``repro.analysis``).
+
+The DSI pipeline is only trustworthy at scale because its invariants hold
+under heavy concurrency, and the hardest bugs of PRs 3-5 were exactly
+invariant violations: a rewrite racing an in-flight read poisoning the
+cache, a superseded lease double-charging a dispatch budget, kernel/numpy
+parity breaks.  This package enforces — statically, in CI — the
+conventions those fixes established by hand:
+
+  * **lock discipline** (``REPRO-L001/L002/L003``): classes that declare a
+    ``self._lock`` must not mutate shared attributes in public methods
+    outside a ``with self._lock`` block; helpers that assume the lock is
+    held carry a ``_locked`` suffix and are only called under the lock.
+  * **clock injection** (``REPRO-C001``): ``core/dpp`` and ``core/cache``
+    read absolute time only through an injected ``clock=`` callable —
+    TTL/lease/heartbeat tests are deterministic exactly because of this.
+  * **kernel parity** (``REPRO-K001/K002``): every ``OP_*`` code in
+    ``kernels/fused_transform.py`` has a counterpart in ``kernels/ref.py``
+    and is exercised by the differential suite in ``tests/test_engine.py``
+    — a new op can never land without a parity oracle.
+  * **metrics contract** (``REPRO-M001/M002``): benchmark-read metric
+    fields must exist on the metric dataclasses, and counters are
+    monotonic (no ``-=``).
+  * **thread hygiene** (``REPRO-T001/T002``): every ``threading.Thread``
+    is daemonized or joined; bare ``except:`` is banned.
+
+Run the gate with ``python -m repro.analysis`` (wired into
+``scripts/ci.sh``).  Findings are suppressible inline with
+``# repro: noqa(RULE-ID)`` or via the checked-in baseline
+(``scripts/analysis_baseline.txt``), so the gate is additive: it fails CI
+only on NEW findings.
+
+The runtime side lives in :mod:`repro.analysis.lockdep`: a lock wrapper +
+acquisition-graph recorder that detects lock-order inversions (cycles in
+the waits-for graph => potential deadlock), exposed as the opt-in
+``lockdep`` pytest fixture for the concurrency-heavy suites.
+
+Dependency-free by design: stdlib ``ast`` + ``threading`` only, so the
+gate runs in any environment that can run the tests.
+"""
+from repro.analysis.core import (
+    Finding,
+    all_rules,
+    load_baseline,
+    run_checks,
+    write_baseline,
+)
+
+__all__ = [
+    "Finding",
+    "all_rules",
+    "load_baseline",
+    "run_checks",
+    "write_baseline",
+]

@@ -1,0 +1,120 @@
+"""Kernel-parity rules (REPRO-K001/K002).
+
+The differential suite in ``tests/test_engine.py`` caught three real
+kernel bugs in PR 5 — it only keeps that power if every fused op stays
+inside its net.  Two structural guarantees:
+
+  * **K001** — every ``OP_*`` code defined in
+    ``src/repro/kernels/fused_transform.py`` has a counterpart of the
+    same name (and value) in ``src/repro/kernels/ref.py``, and vice
+    versa.  The ref module IS the parity oracle; an op without a ref is
+    untestable by construction.
+  * **K002** — every ``OP_*`` code is exercised by
+    ``tests/test_engine.py``.  An op counts as exercised when the test
+    source references the ``OP_<NAME>`` constant itself, or uses the
+    op's transform name in a spec (``OP_SIGRID_HASH`` -> ``SigridHash``).
+    Float-lane variants (``OP_CLAMP_F``) map to their base transform
+    (``Clamp``) — the engine selects the ``_F`` lane from operand dtype,
+    so a float-typed ``Clamp`` differential exercises it.
+
+A new op can therefore never land without a ref implementation and a
+differential test naming it.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional
+
+from repro.analysis.core import CheckContext, Finding, checker, rule
+
+K001 = rule("REPRO-K001",
+            "OP_* code missing its counterpart in kernels/ref.py (or ref "
+            "defines an op the kernel does not)")
+K002 = rule("REPRO-K002",
+            "OP_* code not exercised by the differential suite in "
+            "tests/test_engine.py")
+
+FUSED = "src/repro/kernels/fused_transform.py"
+REF = "src/repro/kernels/ref.py"
+SUITE = "tests/test_engine.py"
+
+
+def _op_defs(mod) -> Dict[str, Optional[int]]:
+    """Module-level ``OP_NAME = <int>`` assignments -> {name: value}."""
+    ops: Dict[str, Optional[int]] = {}
+    for node in mod.tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            t = node.targets[0]
+            if isinstance(t, ast.Name) and t.id.startswith("OP_"):
+                val = node.value
+                ops[t.id] = (
+                    val.value if isinstance(val, ast.Constant)
+                    and isinstance(val.value, int) else None
+                )
+    return ops
+
+
+def transform_name(op_const: str) -> str:
+    """``OP_SIGRID_HASH`` -> ``SigridHash``; float-lane variants map to
+    their base transform (``OP_CLAMP_F`` -> ``Clamp``)."""
+    base = op_const[len("OP_"):]
+    base = re.sub(r"_F$", "", base)
+    return "".join(w.capitalize() for w in base.split("_"))
+
+
+@checker("kernel-parity")
+def check_kernel_parity(ctx: CheckContext):
+    findings: List[Finding] = []
+    fused = ctx.load(FUSED)
+    ref = ctx.load(REF)
+    suite = ctx.load(SUITE)
+    if fused is None:
+        return [Finding(K001, FUSED, 1, "kernel module missing/unparsable")]
+    fused_ops = _op_defs(fused)
+    ref_ops = _op_defs(ref) if ref is not None else {}
+    if ref is None:
+        findings.append(Finding(K001, REF, 1, "ref module missing/unparsable"))
+    for name, value in sorted(fused_ops.items()):
+        line = next(
+            (i + 1 for i, ln in enumerate(fused.lines)
+             if ln.startswith(f"{name} ")), 1
+        )
+        if name not in ref_ops:
+            findings.append(Finding(
+                K001, FUSED, line,
+                f"{name} has no counterpart in kernels/ref.py — the fused "
+                "op has no parity oracle",
+            ))
+        elif ref_ops[name] is not None and value is not None \
+                and ref_ops[name] != value:
+            findings.append(Finding(
+                K001, FUSED, line,
+                f"{name} = {value} but kernels/ref.py says {ref_ops[name]} "
+                "— op-code tables diverge",
+            ))
+    for name in sorted(set(ref_ops) - set(fused_ops)):
+        findings.append(Finding(
+            K001, REF, 1,
+            f"{name} defined in ref.py only — dead oracle or missing "
+            "fused implementation",
+        ))
+    if suite is None:
+        findings.append(Finding(
+            K002, SUITE, 1,
+            "differential suite missing — no op is parity-tested",
+        ))
+        return findings
+    for name in sorted(fused_ops):
+        if name in suite.text or transform_name(name) in suite.text:
+            continue
+        line = next(
+            (i + 1 for i, ln in enumerate(fused.lines)
+             if ln.startswith(f"{name} ")), 1
+        )
+        findings.append(Finding(
+            K002, FUSED, line,
+            f"{name} is never exercised by {SUITE} (neither the constant "
+            f"nor a {transform_name(name)!r} spec appears)",
+        ))
+    return findings

@@ -1,0 +1,190 @@
+"""Metrics-contract rules (REPRO-M001/M002).
+
+The benchmarks are the repo's paper-facing numbers; they read
+``WorkerMetrics``/``TierStats``/``CacheStats``/... fields by attribute.
+A renamed or deleted field turns a Table-9-style benchmark into an
+``AttributeError`` at best and a silently-wrong derived metric at worst.
+
+  * **M001** — every metric attribute a benchmark reads must exist on one
+    of the metric dataclasses (fields, ``@property``s, and methods all
+    count).  Receivers are recognized two ways: chained access through a
+    ``.metrics`` / ``.stats`` attribute (``sess.prefetcher.metrics.fills``),
+    and locals assigned from a metrics getter
+    (``m = sess.worker_metrics()``; ``stats = engine.stats``) — tracking
+    is dropped on reassignment, so ``m = table.partitions[p]`` is never
+    misread as a metrics object.
+  * **M002** — metric counters are monotonic: ``x.hits -= 1`` (or
+    ``x.hits = x.hits - k``) anywhere in ``src/repro`` is a finding.
+    Capacity gauges legitimately shrink and are exempt: ``bytes_stored``
+    (eviction) and ``buffered_batches`` (drain).
+
+The metric vocabulary is parsed from the source of the metric classes
+listed in ``METRIC_CLASSES`` — if one goes missing the checker reports
+that as drift instead of silently checking nothing.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.core import (
+    CheckContext,
+    Finding,
+    attr_chain,
+    checker,
+    enclosing_symbol,
+    rule,
+)
+
+M001 = rule("REPRO-M001",
+            "benchmark reads a metric attribute that no metric class "
+            "defines")
+M002 = rule("REPRO-M002",
+            "metric counter decremented (counters are monotonic; only "
+            "gauges may shrink)")
+
+# module -> metric classes it must define
+METRIC_CLASSES: Dict[str, Tuple[str, ...]] = {
+    "src/repro/core/dpp/worker.py": ("WorkerMetrics",),
+    "src/repro/core/dpp/client.py": ("ClientMetrics",),
+    "src/repro/core/dpp/prefetch.py": ("PrefetchMetrics",),
+    "src/repro/core/dpp/tensor_cache.py": ("CacheStats",),
+    "src/repro/core/cache/stripe_cache.py": ("TierStats", "TenantStats"),
+    "src/repro/core/cache/dedup.py": ("DedupStats",),
+    "src/repro/core/tectonic.py": ("IOStats",),
+    "src/repro/core/engine.py": ("EngineStats",),
+    "src/repro/train/trainer.py": ("StepMetrics",),
+}
+
+# fields that measure *current occupancy*, not cumulative work
+GAUGE_FIELDS = {"bytes_stored", "buffered_batches"}
+
+_GETTER_CALLS = {"worker_metrics", "fleet_metrics"}
+_METRIC_ATTRS = {"metrics", "stats"}
+
+
+def _class_vocab(cls: ast.ClassDef) -> Set[str]:
+    names: Set[str] = set()
+    for node in cls.body:
+        if isinstance(node, ast.AnnAssign) and isinstance(node.target, ast.Name):
+            names.add(node.target.id)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    names.add(t.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            names.add(node.name)
+    return names
+
+
+def _load_vocab(ctx: CheckContext) -> Tuple[Set[str], Set[str], List[Finding]]:
+    """(full vocabulary, counter fields, drift findings)."""
+    vocab: Set[str] = set(_METRIC_ATTRS)   # x.metrics.stats... chains
+    counters: Set[str] = set()
+    drift: List[Finding] = []
+    for rel, classes in METRIC_CLASSES.items():
+        mod = ctx.load(rel)
+        found = {
+            n.name: n for n in ast.walk(mod.tree)
+            if isinstance(n, ast.ClassDef)
+        } if mod is not None else {}
+        for cname in classes:
+            cls = found.get(cname)
+            if cls is None:
+                drift.append(Finding(
+                    M001, rel, 1,
+                    f"metric class {cname} not found — update "
+                    "repro/analysis/checks_metrics.py METRIC_CLASSES",
+                ))
+                continue
+            vocab |= _class_vocab(cls)
+            for node in cls.body:
+                if isinstance(node, ast.AnnAssign) \
+                        and isinstance(node.target, ast.Name) \
+                        and node.target.id not in GAUGE_FIELDS:
+                    counters.add(node.target.id)
+    return vocab, counters, drift
+
+
+class _BenchScan(ast.NodeVisitor):
+    """Per-function tracking of metrics-typed locals + attribute reads."""
+
+    def __init__(self, vocab: Set[str]):
+        self.vocab = vocab
+        self.tracked: Set[str] = set()
+        self.stack: List[ast.AST] = []
+        self.bad: List[Tuple[int, str, str]] = []   # (line, attr, symbol)
+
+    def _push(self, node):
+        self.stack.append(node)
+        self.generic_visit(node)
+        self.stack.pop()
+
+    visit_ClassDef = visit_FunctionDef = visit_AsyncFunctionDef = _push
+
+    def _is_metrics_expr(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+            return node.func.attr in _GETTER_CALLS
+        if isinstance(node, ast.Attribute):
+            return node.attr in _METRIC_ATTRS
+        if isinstance(node, ast.Name):
+            return node.id in self.tracked
+        return False
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        self.generic_visit(node)
+        metric = self._is_metrics_expr(node.value)
+        for t in node.targets:
+            if isinstance(t, ast.Name):
+                if metric:
+                    self.tracked.add(t.id)
+                else:
+                    self.tracked.discard(t.id)
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        recv = node.value
+        is_metric_recv = (
+            (isinstance(recv, ast.Name) and recv.id in self.tracked)
+            or (isinstance(recv, ast.Attribute) and recv.attr in _METRIC_ATTRS)
+        )
+        if is_metric_recv and node.attr not in self.vocab:
+            self.bad.append(
+                (node.lineno, node.attr, enclosing_symbol(self.stack))
+            )
+        self.generic_visit(node)
+
+
+@checker("metrics-contract")
+def check_metrics(ctx: CheckContext):
+    vocab, counters, findings = _load_vocab(ctx)
+    for mod in ctx.glob_modules("benchmarks/*.py"):
+        scan = _BenchScan(vocab)
+        scan.visit(mod.tree)
+        for line, attr, sym in scan.bad:
+            findings.append(Finding(
+                M001, mod.rel, line,
+                f"reads .{attr} on a metrics object but no metric class "
+                "defines it — renamed field or stale benchmark",
+                sym,
+            ))
+    for mod in ctx.src_modules():
+        for node in ast.walk(mod.tree):
+            target = None
+            if isinstance(node, ast.AugAssign) and isinstance(node.op, ast.Sub):
+                target = node.target
+            elif isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.value, ast.BinOp) \
+                    and isinstance(node.value.op, ast.Sub):
+                t, lhs = node.targets[0], node.value.left
+                if isinstance(t, ast.Attribute) and isinstance(lhs, ast.Attribute) \
+                        and t.attr == lhs.attr \
+                        and attr_chain(t) == attr_chain(lhs):
+                    target = t
+            if isinstance(target, ast.Attribute) and target.attr in counters:
+                findings.append(Finding(
+                    M002, mod.rel, node.lineno,
+                    f"decrements counter .{target.attr} — metric counters "
+                    "are monotonic (use a gauge field if occupancy is "
+                    "intended)",
+                ))
+    return findings

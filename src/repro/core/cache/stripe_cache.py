@@ -182,20 +182,20 @@ class StripeCache:
 
     # -- per-tenant accounting ----------------------------------------------
 
-    def _tenant(self, tenant: Optional[str]) -> TenantStats:
+    def _tenant_locked(self, tenant: Optional[str]) -> TenantStats:
         name = tenant if tenant is not None else ANON_TENANT
         ts = self.tenants.get(name)
         if ts is None:
             ts = self.tenants[name] = TenantStats(name)
         return ts
 
-    def _tenant_tier(self, tenant: Optional[str], tier: str) -> TierStats:
-        return getattr(self._tenant(tenant), tier)
+    def _tenant_tier_locked(self, tenant: Optional[str], tier: str) -> TierStats:
+        return getattr(self._tenant_locked(tenant), tier)
 
     def _charge_removal_locked(
         self, stats: TierStats, tier: str, e: _Entry, expired: bool
     ) -> None:
-        owner = self._tenant_tier(e.tenant, tier)
+        owner = self._tenant_tier_locked(e.tenant, tier)
         for s in (stats, owner):
             s.bytes_stored -= len(e.payload)
             if expired:
@@ -205,7 +205,7 @@ class StripeCache:
 
     # -- read path -----------------------------------------------------------
 
-    def _record_read(self, key: CacheKey, nbytes: int) -> None:
+    def _record_read_locked(self, key: CacheKey, nbytes: int) -> None:
         # popularity is tracked per content identity: one "job read" of
         # nbytes against the key's stable integer id
         self.popularity.record_job({hash(key): float(nbytes)})
@@ -278,8 +278,8 @@ class StripeCache:
             else stored[key[2] - k[2]: key[2] - k[2] + key[3]]
         )
         store.move_to_end(k)
-        self._record_read(key, len(payload))
-        for s in (stats, self._tenant_tier(tenant, tier)):
+        self._record_read_locked(key, len(payload))
+        for s in (stats, self._tenant_tier_locked(tenant, tier)):
             s.hits += 1
             s.bytes_served += len(payload)
         stats.io.record(len(payload), media)
@@ -291,8 +291,8 @@ class StripeCache:
 
     def _miss_locked(self, key: CacheKey, tenant: Optional[str]) -> None:
         self.misses += 1
-        self._tenant(tenant).misses += 1
-        self._record_read(key, 0)   # a miss still counts one read
+        self._tenant_locked(tenant).misses += 1
+        self._record_read_locked(key, 0)   # a miss still counts one read
 
     def get(
         self, key: CacheKey, tenant: Optional[str] = None
@@ -374,7 +374,7 @@ class StripeCache:
         # first few LRU entries; worst case is bounded by the protected
         # tenants' resident entry count
         for k, e in store.items():   # OrderedDict iterates LRU-first
-            owner = self._tenant_tier(e.tenant, tier)
+            owner = self._tenant_tier_locked(e.tenant, tier)
             if owner.bytes_stored > self.tenancy.guaranteed_bytes(
                 e.tenant, tier, capacity
             ):
@@ -395,7 +395,7 @@ class StripeCache:
         self._dram[key] = _Entry(
             payload, tenant if tenant is not None else ANON_TENANT, self._expiry()
         )
-        for s in (self.dram, self._tenant_tier(tenant, "dram")):
+        for s in (self.dram, self._tenant_tier_locked(tenant, "dram")):
             s.admitted += 1
             s.bytes_stored += len(payload)
         self._note_locked(key)
@@ -422,12 +422,12 @@ class StripeCache:
             return
         if len(payload) > self.flash_capacity_bytes or not self._is_popular(key):
             self.flash.rejected += 1
-            self._tenant_tier(tenant, "flash").rejected += 1
+            self._tenant_tier_locked(tenant, "flash").rejected += 1
             return
         self._flash[key] = _Entry(
             payload, tenant if tenant is not None else ANON_TENANT, self._expiry()
         )
-        for s in (self.flash, self._tenant_tier(tenant, "flash")):
+        for s in (self.flash, self._tenant_tier_locked(tenant, "flash")):
             s.admitted += 1
             s.bytes_stored += len(payload)
         self._note_locked(key)

@@ -30,7 +30,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.transforms import TransformPipeline, TransformSpec
 
@@ -124,9 +124,13 @@ class DPPMaster:
         lease_s: float = 30.0,
         partition_stripe_rows: Optional[Dict[int, int]] = None,
         dispatch_budget: int = 3,
+        clock: Callable[[], float] = time.time,
     ):
         self.spec = spec
         self.lease_s = lease_s
+        # injected clock (REPRO-C001): lease expiry / heartbeat tests can
+        # drive time deterministically instead of sleeping
+        self._clock = clock
         self.dispatch_budget = max(1, dispatch_budget)
         self._lock = threading.Lock()
         self._splits: Dict[int, Split] = {}
@@ -162,13 +166,13 @@ class DPPMaster:
 
     def get_split(self, worker_id: str) -> Optional[Split]:
         with self._lock:
-            self._workers[worker_id] = time.time()
+            self._workers[worker_id] = self._clock()
             self._reclaim_expired_locked()
             if not self._pending:
                 return None
             sid = self._pending.pop(0)
             self._dispatches[sid] = self._dispatches.get(sid, 0) + 1
-            self._leased[sid] = _Lease(worker_id, time.time() + self.lease_s)
+            self._leased[sid] = _Lease(worker_id, self._clock() + self.lease_s)
             return self._splits[sid]
 
     def peek_pending(self, n: int) -> List[Split]:
@@ -247,7 +251,7 @@ class DPPMaster:
             self._pending.insert(0, sid)
 
     def _reclaim_expired_locked(self) -> None:
-        now = time.time()
+        now = self._clock()
         expired = [sid for sid, l in self._leased.items() if l.deadline < now]
         for sid in expired:
             # straggler mitigation / failure handling: a silent lease expiry
@@ -309,7 +313,7 @@ class DPPMaster:
         dispatch budget.  A genuinely lost worker stops heartbeating, so
         straggler re-dispatch still fires on real failures.  (``get_split``
         deliberately does NOT extend leases — only active processing does.)"""
-        now = time.time()
+        now = self._clock()
         with self._lock:
             self._workers[worker_id] = now
             for l in self._leased.values():
@@ -317,7 +321,7 @@ class DPPMaster:
                     l.deadline = now + self.lease_s
 
     def dead_workers(self, timeout_s: float = 10.0) -> List[str]:
-        now = time.time()
+        now = self._clock()
         with self._lock:
             return [w for w, t in self._workers.items() if now - t > timeout_s]
 
@@ -367,11 +371,13 @@ class DPPMaster:
         partition_rows: Dict[int, int],
         lease_s: float = 30.0,
         dispatch_budget: int = 3,
+        clock: Callable[[], float] = time.time,
     ) -> "DPPMaster":
         m = cls(
             ckpt["spec"], partition_rows, lease_s=lease_s,
             partition_stripe_rows=ckpt.get("stripe_rows"),
             dispatch_budget=dispatch_budget,
+            clock=clock,
         )
         with m._lock:
             for sid in ckpt["done"]:

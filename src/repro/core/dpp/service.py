@@ -15,7 +15,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -47,12 +47,16 @@ class DPPSession:
         dispatch_budget: int = 3,
         elastic_policy: Optional[ElasticPolicy] = None,
         engine: str = "numpy",
+        clock: Callable[[], float] = time.time,
     ):
         self.spec = spec
         self.table = table
         self.name = name                   # tenant id for the stripe cache
         self._on_stop = on_stop            # e.g. release the tenant's share
         self.engine = engine               # TransformEngine for every worker
+        # injected clock (REPRO-C001): deadlines/scale-event timestamps are
+        # testable without wall-clock sleeps; shared with the master
+        self._clock = clock
         partition_rows = {p: table.partitions[p].num_rows for p in spec.partitions}
         # stripe-aligned splits: the writer emits uniform stripes, so the
         # first stripe's row count is the partition's stripe size
@@ -65,6 +69,7 @@ class DPPSession:
             spec, partition_rows, lease_s=lease_s,
             partition_stripe_rows=partition_stripe_rows,
             dispatch_budget=dispatch_budget,
+            clock=clock,
         )
         # feedback-driven elastic scaling (ISSUE 4): stall rate + queue
         # depth drive worker count and prefetch depth, with hysteresis
@@ -213,7 +218,7 @@ class DPPSession:
                     v.drain()
             if decision.worker_delta != 0:
                 self.scale_events.append({
-                    "t": time.time(), "delta": decision.worker_delta,
+                    "t": self._clock(), "delta": decision.worker_delta,
                     "reason": decision.reason,
                 })
 
@@ -246,9 +251,9 @@ class DPPSession:
         """
         self.start()
         out = []
-        deadline = time.time() + timeout_s
+        deadline = self._clock() + timeout_s
         try:
-            while time.time() < deadline:
+            while self._clock() < deadline:
                 # short poll: the post-exhaustion drain check costs one poll
                 # interval, not a whole client timeout (which would be billed
                 # as trainer stall time and swamp the Table-7 metric)
@@ -281,8 +286,10 @@ class DPPService:
         stripe_cache: Optional[StripeCache] = None,
         tensor_cache=None,
         enable_stripe_cache: bool = True,
+        clock: Callable[[], float] = time.time,
     ):
         self.warehouse = warehouse
+        self._clock = clock
         self.stripe_cache = stripe_cache or (
             StripeCache() if enable_stripe_cache else None
         )
@@ -359,9 +366,9 @@ class DPPService:
         ]
         for t in threads:
             t.start()
-        deadline = time.time() + timeout_s
+        deadline = self._clock() + timeout_s
         for t in threads:
-            t.join(max(0.0, deadline - time.time()))
+            t.join(max(0.0, deadline - self._clock()))
         # a wedged session past the deadline reports empty rather than
         # silently dropping its key
         for name in self.sessions:

@@ -154,7 +154,11 @@ class TectonicFS:
     def attach_cache(self, cache) -> None:
         """Install a shared ``StripeCache``: subsequent ``read_extents``
         calls are served from it on hit and admit into it on miss."""
-        self.cache = cache
+        with self._mutate_lock:
+            # published under the mutate lock so an in-flight read's
+            # (data, blocks, generation) snapshot can never straddle the
+            # cache swap
+            self.cache = cache
 
     # -- write path ---------------------------------------------------------
 
@@ -174,7 +178,7 @@ class TectonicFS:
             self._blocks[path] = refs
             self._files[path] = data
 
-    def _release_placement(self, path: str) -> None:
+    def _release_placement_locked(self, path: str) -> None:
         """Drop a file's block placement and cached stripes before its
         bytes change; otherwise per-node used_bytes double-counts and the
         cache can serve stale data."""
@@ -191,7 +195,7 @@ class TectonicFS:
     def append(self, path: str, data: bytes) -> None:
         with self._mutate_lock:
             base = self._files.get(path, b"")
-            self._release_placement(path)
+            self._release_placement_locked(path)
             self.create(path, base + data)
 
     def rewrite(self, path: str, data: bytes) -> None:
@@ -202,7 +206,7 @@ class TectonicFS:
         the new bytes land, so no reader can be served the old content."""
         with self._mutate_lock:
             assert path in self._files, f"rewrite of non-existent file: {path}"
-            self._release_placement(path)
+            self._release_placement_locked(path)
             self.create(path, data)
 
     def exists(self, path: str) -> bool:
@@ -334,9 +338,12 @@ class TectonicFS:
     # -- fleet metrics (Fig. 1 / §7.1 style) --------------------------------
 
     def reset_stats(self) -> None:
-        self.stats = IOStats()
-        for n in self.nodes:
-            n.stats = IOStats()
+        # a reset racing a concurrent read's stats.record would lose the
+        # in-flight I/O or resurrect the pre-reset counters
+        with self._stats_lock:
+            self.stats = IOStats()
+            for n in self.nodes:
+                n.stats = IOStats()
 
     def power_W(self) -> float:
         return sum(n.media.power_W for n in self.nodes)

@@ -11,3 +11,27 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+# lock construction sites the lock-order sanitizer should track: repo code
+# only — stdlib Condition/Queue internals stay real locks (harmless for
+# cycle detection but noisy, and patching them buys nothing)
+_REPRO_LOCK_FILES = (
+    "stripe_cache.py", "tectonic.py", "master.py", "worker.py",
+    "service.py", "client.py", "prefetch.py", "tensor_cache.py",
+    "dedup.py", "warehouse.py", "autoscale.py", "engine.py", "trainer.py",
+)
+
+
+@pytest.fixture
+def lockdep():
+    """Opt-in lock-order sanitizer: every Lock/RLock a repro module builds
+    during the test is tracked; teardown fails the test on any lock-order
+    cycle (potential deadlock), with ordered acquisition stacks."""
+    from repro.analysis import lockdep as ld
+
+    with ld.patched(
+        name_filter=lambda s: s.startswith(_REPRO_LOCK_FILES)
+    ) as graph:
+        yield graph
+    graph.assert_no_cycles()

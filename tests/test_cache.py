@@ -257,10 +257,13 @@ def test_generation_prevents_stale_admit_after_rewrite():
     assert cache.get(key_new) is None     # old bytes unreachable
 
 
-def test_rewrite_racing_inflight_read_never_poisons_cache():
+def test_rewrite_racing_inflight_read_never_poisons_cache(lockdep):
     # a rewrite landing in the middle of read_extents_ex must not let the
     # in-flight reader admit its pre-rewrite snapshot bytes under keys
-    # that describe the NEW file version
+    # that describe the NEW file version.  Runs under the lock-order
+    # sanitizer: the rewrite-from-inside-a-read path nests
+    # TectonicFS._mutate_lock / StripeCache._lock both ways around if the
+    # discipline regresses — exactly what lockdep's teardown would flag.
     wh, t = _warehouse()
     cache = StripeCache()
     wh.attach_cache(cache)

@@ -1,0 +1,85 @@
+"""Tests for the doc-drift gate (``scripts/check_docs.py``).
+
+The gate is itself part of CI, so it gets the same treatment as any other
+checker: fixture trees proving it fires on stale references, and a
+real-tree run proving the shipped docs are clean.
+"""
+from __future__ import annotations
+
+import importlib.util
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+_spec = importlib.util.spec_from_file_location(
+    "check_docs", REPO / "scripts" / "check_docs.py"
+)
+check_docs = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_docs)
+
+
+def _doc_repo(tmp_path: Path, readme: str) -> Path:
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "src" / "repro").mkdir(parents=True)
+    (tmp_path / "src" / "repro" / "real.py").write_text("x = 1\n")
+    (tmp_path / "README.md").write_text(textwrap.dedent(readme))
+    return tmp_path
+
+
+def test_flags_removed_src_path(tmp_path, capsys):
+    repo = _doc_repo(tmp_path, """\
+        See `src/repro/real.py` (exists) and `src/repro/removed.py`
+        (deleted two PRs ago).
+    """)
+    assert check_docs.main(repo) == 1
+    out = capsys.readouterr().out
+    assert "src/repro/removed.py" in out and "src/repro/real.py" not in out
+
+
+def test_flags_stale_python_m_command(tmp_path, capsys):
+    repo = _doc_repo(tmp_path, """\
+        Run `python -m repro.no_such_module_anywhere` to reproduce.
+    """)
+    assert check_docs.main(repo) == 1
+    assert "repro.no_such_module_anywhere" in capsys.readouterr().out
+
+
+def test_flags_missing_script_and_docs_file(tmp_path, capsys):
+    repo = _doc_repo(tmp_path, """\
+        Run `python scripts/gone.py`; background in docs/missing.md.
+    """)
+    assert check_docs.main(repo) == 1
+    out = capsys.readouterr().out
+    assert "scripts/gone.py" in out and "docs/missing.md" in out
+
+
+def test_flags_unknown_analysis_rule_id(tmp_path, capsys):
+    # repro.analysis is importable from the dev environment, so fixture
+    # docs citing an unregistered rule id must be flagged as drift
+    repo = _doc_repo(tmp_path, """\
+        Suppress with `# repro: noqa(REPRO-L001)` (real) or
+        `# repro: noqa(REPRO-Z999)` (never registered).
+    """)
+    assert check_docs.main(repo) == 1
+    out = capsys.readouterr().out
+    assert "REPRO-Z999" in out and "REPRO-L001" not in out
+
+
+def test_clean_fixture_tree_passes(tmp_path, capsys):
+    repo = _doc_repo(tmp_path, """\
+        See `src/repro/real.py`, wildcard src/repro/*.py, and the family
+        src/repro/... — all resolvable.  Rule REPRO-C001 is registered.
+    """)
+    assert check_docs.main(repo) == 0
+    assert "doc drift: ok" in capsys.readouterr().out
+
+
+def test_real_tree_is_clean(capsys):
+    """The shipped README + docs/ must pass their own gate."""
+    assert check_docs.main(REPO) == 0
+    out = capsys.readouterr().out
+    assert "doc drift: ok" in out

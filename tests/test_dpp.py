@@ -92,6 +92,29 @@ def test_straggler_lease_redispatch():
     assert s2.split_id == s.split_id
 
 
+def test_lease_expiry_deterministic_with_injected_clock():
+    """The REPRO-C001 payoff: lease/heartbeat logic is driven by a fake
+    clock — no sleeps, no wall-clock flakiness."""
+    t = _table(n_partitions=1, rows=512)
+    spec = _spec(t)
+    rows = {p: t.partitions[p].num_rows for p in spec.partitions}
+    now = [1000.0]
+    m = DPPMaster(spec, rows, lease_s=30.0, clock=lambda: now[0])
+    s = m.get_split("slow")
+    now[0] += 29.0                      # inside the lease: still held
+    s_f = m.get_split("fast")
+    assert s_f.split_id != s.split_id
+    m.heartbeat("slow")                 # extends the deadline to now+30
+    now[0] += 5.0
+    assert m.dead_workers(timeout_s=10.0) == []
+    now[0] += 27.0                      # both leases now expired
+    assert set(m.dead_workers(timeout_s=10.0)) == {"slow", "fast"}
+    # straggler mitigation reclaims and re-dispatches both expired splits
+    redispatched = {m.get_split("fresh").split_id,
+                    m.get_split("fresh").split_id}
+    assert redispatched == {s.split_id, s_f.split_id}
+
+
 def test_forget_worker_releases_leases():
     t = _table(n_partitions=1, rows=512)
     spec = _spec(t)
@@ -556,7 +579,10 @@ def test_tensor_cache_generation_aware_keys_after_rewrite():
     assert ref != stale                       # content actually changed
 
 
-def test_session_with_prefetch_serves_identical_batches():
+def test_session_with_prefetch_serves_identical_batches(lockdep):
+    # under the lock-order sanitizer: this path exercises the widest lock
+    # interplay in the repo (master lease lock, worker buffers, stripe
+    # cache, prefetch planner, tectonic mutate/stats locks) concurrently
     from repro.core.cache import StripeCache
     from repro.core.dpp import DPPService
 

@@ -309,6 +309,36 @@ def test_op_code_tables_agree():
         assert getattr(E, n) == getattr(FT, n) == getattr(R, n), n
 
 
+def test_identity_lanes_pass_through_kernel():
+    """OP_IDENTITY differential: a wave mixing identity lanes with real ops
+    must leave the identity columns bit-identical to the input — in both
+    the Pallas kernel and the jnp oracle.  (Identity lanes are how ragged
+    padding rides through a fused wave untouched.)"""
+    from repro.kernels import ref as R
+    from repro.kernels.ops import fused_transform as K
+
+    rng = np.random.default_rng(7)
+    rows, feats = 6, 8
+    ids = rng.integers(-2 ** 31, 2 ** 31, size=(rows, feats)).astype(np.int32)
+    op_codes = np.array(
+        [R.OP_IDENTITY, R.OP_SIGRID_HASH, R.OP_IDENTITY, R.OP_POSITIVE_MODULUS,
+         R.OP_IDENTITY, R.OP_CLAMP, R.OP_IDENTITY, R.OP_BUCKETIZE],
+        dtype=np.int32,
+    )
+    param0 = np.array([0, 7, 0, 0, 0, -50, 0, -100], dtype=np.int32)
+    param1 = np.array([0, 33, 0, 13, 0, 50, 0, 10], dtype=np.int32)
+    got_kernel = np.asarray(K(ids, op_codes, param0, param1, use_pallas=True))
+    got_ref = np.asarray(R.fused_transform(ids, op_codes, param0, param1))
+    np.testing.assert_array_equal(got_kernel, got_ref)
+    identity_lanes = op_codes == R.OP_IDENTITY
+    np.testing.assert_array_equal(
+        got_kernel[:, identity_lanes], ids[:, identity_lanes]
+    )
+    # and the non-identity lanes actually transformed something
+    assert not np.array_equal(got_kernel[:, ~identity_lanes],
+                              ids[:, ~identity_lanes])
+
+
 def test_xla_oracle_dispatch_matches_interpret_dispatch():
     """use_pallas=None (XLA static-codes oracle off-TPU) and use_pallas=True
     (interpret-mode pallas_call) produce identical bits."""

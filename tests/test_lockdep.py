@@ -1,0 +1,189 @@
+"""Regression tests for the runtime lock-order sanitizer
+(``repro.analysis.lockdep``).
+
+The seeded-inversion tests prove the detector actually fires: an A->B /
+B->A nesting — the classic deadlock shape — must raise ``LockOrderError``
+from a *single-threaded* run (a cycle in the acquisition graph means a
+deadlocking schedule exists; no real deadlock is needed).  The clean-run
+guarantee over the real StripeCache/TectonicFS stack lives in
+``test_cache.py`` / ``test_dpp.py`` via the opt-in ``lockdep`` fixture.
+"""
+from __future__ import annotations
+
+import threading
+
+import pytest
+
+from repro.analysis.lockdep import LockGraph, LockOrderError, patched
+
+
+def _nest(graph: LockGraph, *names: str) -> None:
+    """Simulate one thread acquiring ``names`` in order, then releasing."""
+    for n in names:
+        graph.note_acquire(n)
+    for n in reversed(names):
+        graph.note_release(n)
+
+
+# -- graph-level unit tests ---------------------------------------------------
+
+
+def test_graph_detects_two_lock_inversion():
+    g = LockGraph()
+    _nest(g, "A", "B")
+    _nest(g, "B", "A")
+    cycles = g.cycles()
+    assert len(cycles) == 1 and set(cycles[0]) == {"A", "B"}
+    with pytest.raises(LockOrderError):
+        g.assert_no_cycles()
+
+
+def test_graph_detects_three_lock_cycle():
+    g = LockGraph()
+    _nest(g, "A", "B")
+    _nest(g, "B", "C")
+    _nest(g, "C", "A")
+    cycles = g.cycles()
+    assert len(cycles) == 1 and set(cycles[0]) == {"A", "B", "C"}
+
+
+def test_graph_consistent_order_is_clean():
+    g = LockGraph()
+    for _ in range(3):
+        _nest(g, "A", "B", "C")
+    _nest(g, "A", "C")
+    g.assert_no_cycles()
+    assert "no cycles" in g.report()
+
+
+def test_graph_ignore_suppresses_known_ladder():
+    g = LockGraph(ignore=["B"])
+    _nest(g, "A", "B")
+    _nest(g, "B", "A")
+    g.assert_no_cycles()
+
+
+def test_graph_reentrant_reacquire_adds_no_edge():
+    g = LockGraph()
+    g.note_acquire("R")
+    g.note_acquire("R")       # RLock re-entry
+    g.note_release("R")
+    g.note_release("R")
+    assert g.edges() == []
+
+
+# -- TrackedLock / patched() end-to-end --------------------------------------
+
+
+def test_seeded_inversion_detected_with_stacks():
+    """The acceptance fixture: two locks nested A->B on one code path and
+    B->A on another must be reported as a cycle with the ordered
+    acquisition stacks of both edges."""
+    with patched() as g:
+        a = threading.Lock()
+        b = threading.Lock()
+    with a:
+        with b:
+            pass
+    with b:
+        with a:                  # inversion
+            pass
+    with pytest.raises(LockOrderError) as ei:
+        g.assert_no_cycles()
+    report = str(ei.value)
+    assert "lock-order cycle" in report
+    assert report.count("held, then acquired") == 2
+    assert report.count("acquired at:") == 4      # both ends of both edges
+    assert "test_lockdep.py" in report
+
+
+def test_consistent_nesting_under_patch_is_clean():
+    with patched() as g:
+        outer = threading.Lock()
+        inner = threading.Lock()
+    for _ in range(2):
+        with outer:
+            with inner:
+                pass
+    g.assert_no_cycles()
+    assert len(g.edges()) == 1
+
+
+def test_patched_rlock_reentry_is_not_a_cycle():
+    with patched() as g:
+        r = threading.RLock()
+    with r:
+        with r:
+            pass
+    g.assert_no_cycles()
+    assert g.edges() == []
+
+
+def test_patched_restores_real_factories():
+    real_lock, real_rlock = threading.Lock, threading.RLock
+    with patched():
+        assert threading.Lock is not real_lock
+    assert threading.Lock is real_lock and threading.RLock is real_rlock
+
+
+def test_name_filter_limits_tracking():
+    with patched(name_filter=lambda s: False) as g:
+        a = threading.Lock()
+        b = threading.Lock()
+    with a:
+        with b:
+            pass
+    with b:
+        with a:
+            pass
+    g.assert_no_cycles()          # nothing tracked, nothing reported
+    assert g.edges() == []
+
+
+def test_condition_and_threads_work_under_patch():
+    """Tracked locks must keep Condition/Queue semantics: a worker thread
+    waits on a Condition built from a patched Lock and is notified."""
+    with patched() as g:
+        lk = threading.Lock()
+        cond = threading.Condition(lk)
+    hits = []
+
+    def worker():
+        with cond:
+            while not hits:
+                cond.wait(timeout=5.0)
+            hits.append("seen")
+
+    t = threading.Thread(target=worker)
+    t.start()
+    with cond:
+        hits.append("set")
+        cond.notify_all()
+    t.join(timeout=5.0)
+    assert not t.is_alive() and hits == ["set", "seen"]
+    g.assert_no_cycles()
+
+
+def test_cross_thread_inversion_detected():
+    """Each thread takes a consistent-looking order locally; together the
+    orders invert.  The graph merges per-thread edges, so the cycle is
+    caught without any actual deadlock (locks never held concurrently)."""
+    with patched() as g:
+        a = threading.Lock()
+        b = threading.Lock()
+    done = []
+
+    def t1():
+        with a:
+            with b:
+                done.append("t1")
+
+    th = threading.Thread(target=t1)
+    th.start()
+    th.join(timeout=5.0)
+    with b:
+        with a:
+            done.append("main")
+    assert done == ["t1", "main"]
+    with pytest.raises(LockOrderError):
+        g.assert_no_cycles()
