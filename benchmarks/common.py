@@ -2,14 +2,22 @@
 from __future__ import annotations
 
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, Dict, List, Tuple
 
 ROWS: List[Tuple[str, float, str]] = []
+REPORTS: List[Tuple[str, Dict]] = []
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def emit_report(name: str, payload: Dict) -> None:
+    """Attach a structured payload (e.g. the per-tenant stall-attribution
+    table) to the current section; ``run.py --quick`` embeds it under
+    ``sections[<section>]["reports"][name]`` in ``BENCH_quick.json``."""
+    REPORTS.append((name, payload))
 
 
 def time_us(fn: Callable, *args, repeat: int = 3, number: int = 1) -> float:

@@ -35,6 +35,7 @@ SECTIONS = [
     "optimizations",    # Table 12
     "kernels",          # §7.2 fused transform + hot kernels
     "engine",           # §7.2 fused TransformEngine vs per-feature (ISSUE 5)
+    "obs",              # telemetry overhead + Table-7 stall attribution
     "power",            # Fig 1
     "coordination",     # Figs 4/5/6, Table 2
 ]
@@ -59,6 +60,7 @@ def main() -> None:
             continue
         print(f"# === {section} ===")
         row_mark = len(common.ROWS)
+        report_mark = len(common.REPORTS)
         t0 = time.time()
         status = "ok"
         try:
@@ -84,6 +86,9 @@ def main() -> None:
                 {"name": n, "us_per_call": us, "derived": d}
                 for n, us, d in common.ROWS[row_mark:]
             ],
+            # structured payloads (emit_report): e.g. the obs section's
+            # per-tenant stall-attribution table
+            "reports": {n: p for n, p in common.REPORTS[report_mark:]},
         }
     report["finished_at"] = time.time()
     if args.quick:

@@ -1,0 +1,107 @@
+#!/usr/bin/env python3
+"""Compare two ``BENCH_quick.json`` artifacts and flag regressions.
+
+  python scripts/bench_diff.py OLD.json NEW.json [--threshold 0.25]
+
+A metric row regresses when its ``us_per_call`` grew by more than
+``threshold`` (default 25% — benchmark timings on shared CI hosts are
+noisy; tighten per-invocation for quiet machines).  A section regresses
+when its status flips from ``ok`` to a failure.  Rows that appear or
+vanish between the two artifacts are reported informationally — renames
+are a review concern, not an automatic failure.  Exits 1 iff at least
+one regression was found, so CI can gate on trend directly:
+
+  python -m benchmarks.run --quick        # writes BENCH_quick.json
+  python scripts/bench_diff.py baseline.json BENCH_quick.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional, Tuple
+
+
+def _rows(report: Dict) -> Dict[Tuple[str, str], float]:
+    """(section, metric-name) -> us_per_call."""
+    out: Dict[Tuple[str, str], float] = {}
+    for section, body in report.get("sections", {}).items():
+        for row in body.get("metrics", []):
+            out[(section, row["name"])] = float(row["us_per_call"])
+    return out
+
+
+def _statuses(report: Dict) -> Dict[str, str]:
+    return {
+        section: body.get("status", "ok")
+        for section, body in report.get("sections", {}).items()
+    }
+
+
+def compare(old: Dict, new: Dict, threshold: float) -> Tuple[List[str], List[str]]:
+    """(regressions, notes) — human-readable lines."""
+    regressions: List[str] = []
+    notes: List[str] = []
+    old_status, new_status = _statuses(old), _statuses(new)
+    for section, status in sorted(new_status.items()):
+        prev = old_status.get(section)
+        if prev is None:
+            notes.append(f"section {section}: new (status={status})")
+        elif prev == "ok" and status.startswith("failed"):
+            regressions.append(f"section {section}: ok -> {status}")
+        elif prev != status:
+            notes.append(f"section {section}: status {prev} -> {status}")
+    old_rows, new_rows = _rows(old), _rows(new)
+    for key, new_us in sorted(new_rows.items()):
+        section, name = key
+        old_us = old_rows.get(key)
+        if old_us is None:
+            notes.append(f"row {name} [{section}]: added")
+            continue
+        if old_us <= 0.0:
+            continue                     # flag-style rows time at 0
+        ratio = new_us / old_us
+        line = (
+            f"row {name} [{section}]: {old_us:.1f} -> {new_us:.1f} us "
+            f"({ratio:.2f}x)"
+        )
+        if ratio > 1.0 + threshold:
+            regressions.append(line)
+        elif ratio < 1.0 / (1.0 + threshold):
+            notes.append(line + "  (improved)")
+    for key in sorted(set(old_rows) - set(new_rows)):
+        notes.append(f"row {key[1]} [{key[0]}]: removed")
+    return regressions, notes
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff two BENCH_quick.json artifacts; exit 1 on "
+                    "regression"
+    )
+    ap.add_argument("old", help="baseline BENCH_quick.json")
+    ap.add_argument("new", help="candidate BENCH_quick.json")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="fractional us_per_call growth tolerated "
+                         "(default 0.25 = +25%%)")
+    args = ap.parse_args(argv)
+    with open(args.old, "r", encoding="utf-8") as f:
+        old = json.load(f)
+    with open(args.new, "r", encoding="utf-8") as f:
+        new = json.load(f)
+    regressions, notes = compare(old, new, args.threshold)
+    for line in notes:
+        print(f"  note: {line}")
+    for line in regressions:
+        print(f"  REGRESSION: {line}")
+    if regressions:
+        print(f"bench_diff: {len(regressions)} regression(s) "
+              f"(threshold +{args.threshold * 100:.0f}%)")
+        return 1
+    print(f"bench_diff: ok — {len(_rows(new))} row(s) within "
+          f"+{args.threshold * 100:.0f}%")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,8 +5,14 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 # invariant gate: lock discipline, clock injection, kernel parity,
-# metrics contract, thread hygiene (docs/static_analysis.md)
+# metrics contract, span hygiene, thread hygiene (docs/static_analysis.md)
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.analysis
+# telemetry smoke: traced two-tenant run -> artifact -> stall-report gate
+# (Perfetto-loadable trace, shares sum to 100, no span left open)
+OBS_TRACE="$(mktemp /tmp/obs_trace.XXXXXX.json)"
+trap 'rm -f "$OBS_TRACE"' EXIT
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.obs.smoke --out "$OBS_TRACE" --rows 256
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.obs.report "$OBS_TRACE" --check
 # benchmark smoke: every bench module must import; quick-capable sections run
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --quick
 # doc drift: every path / python -m command / REPRO rule id the docs

@@ -18,14 +18,19 @@ A renamed or deleted field turns a Table-9-style benchmark into an
     Capacity gauges legitimately shrink and are exempt: ``bytes_stored``
     (eviction) and ``buffered_batches`` (drain).
 
-The metric vocabulary is parsed from the source of the metric classes
-listed in ``METRIC_CLASSES`` — if one goes missing the checker reports
-that as drift instead of silently checking nothing.
+The metric vocabulary is *discovered*, not hand-listed: any class in the
+src tree declaring at least one ``counter()`` / ``gauge()`` field
+(:mod:`repro.obs.meta`) is a metric class; its declared counters feed
+M002 and its full surface (fields + properties + methods) feeds M001.
+Which fields may shrink comes from the same declarations — a field is
+exempt from M002 iff some metric class declares it ``gauge()``.  If
+discovery finds nothing repo-wide the checker reports that as drift
+instead of silently checking nothing.
 """
 from __future__ import annotations
 
 import ast
-from typing import Dict, List, Optional, Set, Tuple
+from typing import List, Set, Tuple
 
 from repro.analysis.core import (
     CheckContext,
@@ -43,24 +48,23 @@ M002 = rule("REPRO-M002",
             "metric counter decremented (counters are monotonic; only "
             "gauges may shrink)")
 
-# module -> metric classes it must define
-METRIC_CLASSES: Dict[str, Tuple[str, ...]] = {
-    "src/repro/core/dpp/worker.py": ("WorkerMetrics",),
-    "src/repro/core/dpp/client.py": ("ClientMetrics",),
-    "src/repro/core/dpp/prefetch.py": ("PrefetchMetrics",),
-    "src/repro/core/dpp/tensor_cache.py": ("CacheStats",),
-    "src/repro/core/cache/stripe_cache.py": ("TierStats", "TenantStats"),
-    "src/repro/core/cache/dedup.py": ("DedupStats",),
-    "src/repro/core/tectonic.py": ("IOStats",),
-    "src/repro/core/engine.py": ("EngineStats",),
-    "src/repro/train/trainer.py": ("StepMetrics",),
-}
-
-# fields that measure *current occupancy*, not cumulative work
-GAUGE_FIELDS = {"bytes_stored", "buffered_batches"}
-
 _GETTER_CALLS = {"worker_metrics", "fleet_metrics"}
 _METRIC_ATTRS = {"metrics", "stats"}
+_DECL_FNS = ("counter", "gauge")
+
+
+def _decl_kind(stmt: ast.stmt) -> Tuple[str, str]:
+    """("counter"|"gauge", field) for ``f: T = counter(...)``-style
+    declarations (bare or module-qualified), else ("", "")."""
+    if not (isinstance(stmt, ast.AnnAssign)
+            and isinstance(stmt.target, ast.Name)
+            and isinstance(stmt.value, ast.Call)):
+        return "", ""
+    fn = stmt.value.func
+    name = fn.id if isinstance(fn, ast.Name) else (
+        fn.attr if isinstance(fn, ast.Attribute) else ""
+    )
+    return (name, stmt.target.id) if name in _DECL_FNS else ("", "")
 
 
 def _class_vocab(cls: ast.ClassDef) -> Set[str]:
@@ -77,33 +81,48 @@ def _class_vocab(cls: ast.ClassDef) -> Set[str]:
     return names
 
 
+def discover_metric_classes(ctx: CheckContext):
+    """Every class in the src tree declaring at least one ``counter()``
+    or ``gauge()`` field, as ``(rel, ClassDef, counters, gauges)``."""
+    out = []
+    for mod in ctx.src_modules():
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            counters: Set[str] = set()
+            gauges: Set[str] = set()
+            for stmt in node.body:
+                kind, field = _decl_kind(stmt)
+                if kind == "counter":
+                    counters.add(field)
+                elif kind == "gauge":
+                    gauges.add(field)
+            if counters or gauges:
+                out.append((mod.rel, node, counters, gauges))
+    return out
+
+
 def _load_vocab(ctx: CheckContext) -> Tuple[Set[str], Set[str], List[Finding]]:
     """(full vocabulary, counter fields, drift findings)."""
     vocab: Set[str] = set(_METRIC_ATTRS)   # x.metrics.stats... chains
     counters: Set[str] = set()
+    gauges: Set[str] = set()
     drift: List[Finding] = []
-    for rel, classes in METRIC_CLASSES.items():
-        mod = ctx.load(rel)
-        found = {
-            n.name: n for n in ast.walk(mod.tree)
-            if isinstance(n, ast.ClassDef)
-        } if mod is not None else {}
-        for cname in classes:
-            cls = found.get(cname)
-            if cls is None:
-                drift.append(Finding(
-                    M001, rel, 1,
-                    f"metric class {cname} not found — update "
-                    "repro/analysis/checks_metrics.py METRIC_CLASSES",
-                ))
-                continue
-            vocab |= _class_vocab(cls)
-            for node in cls.body:
-                if isinstance(node, ast.AnnAssign) \
-                        and isinstance(node.target, ast.Name) \
-                        and node.target.id not in GAUGE_FIELDS:
-                    counters.add(node.target.id)
-    return vocab, counters, drift
+    discovered = discover_metric_classes(ctx)
+    if not discovered:
+        drift.append(Finding(
+            M001, "src/repro/obs/meta.py", 1,
+            "no metric class discovered repo-wide — counter()/gauge() "
+            "field declarations have vanished, so M001/M002 would check "
+            "nothing",
+        ))
+    for _rel, cls, cs, gs in discovered:
+        vocab |= _class_vocab(cls)
+        counters |= cs
+        gauges |= gs
+    # name-level exemption: a field gauge() *anywhere* may shrink (the
+    # M002 scan sees attribute names, not receiver types)
+    return vocab, counters - gauges, drift
 
 
 class _BenchScan(ast.NodeVisitor):

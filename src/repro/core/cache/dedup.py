@@ -19,6 +19,8 @@ import dataclasses
 import hashlib
 from typing import Dict, List, Optional, Tuple
 
+from repro.obs import counter
+
 # Cache key: ("c", digest, rel_off, length) for content-addressed extents,
 # ("p", (path, generation), offset, length) for the path-addressed fallback.
 # The generation is bumped on every invalidation (partition rewrite), so a
@@ -42,9 +44,9 @@ class _StripeSpan:
 
 @dataclasses.dataclass
 class DedupStats:
-    stripes_registered: int = 0
-    logical_bytes: int = 0        # sum of registered stripe lengths
-    unique_bytes: int = 0         # sum over distinct digests
+    stripes_registered: int = counter()
+    logical_bytes: int = counter()    # sum of registered stripe lengths
+    unique_bytes: int = counter()     # sum over distinct digests
 
     @property
     def dedup_ratio(self) -> float:

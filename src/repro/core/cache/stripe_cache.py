@@ -47,6 +47,7 @@ from repro.core.cache.dedup import CacheKey, DedupIndex
 from repro.core.cache.tenancy import TenantPolicy
 from repro.core.popularity import PopularityTracker
 from repro.core.tectonic import IOStats, MediaSpec
+from repro.obs import counter, gauge
 
 # Cache-tier device models.  DRAM is effectively seek-free; FLASH is a
 # single NVMe cache device (drive-level power, unlike the SSD *node* spec
@@ -71,15 +72,15 @@ def iops_per_watt(num_ios: int, time_s: float, power_W: float) -> float:
 
 @dataclasses.dataclass
 class TierStats:
-    name: str
-    hits: int = 0
-    bytes_served: int = 0
-    admitted: int = 0
-    bytes_stored: int = 0
-    evictions: int = 0
-    expired: int = 0               # TTL expiries (counted apart from evictions)
-    rejected: int = 0              # flash admissions refused (unpopular)
-    io: IOStats = dataclasses.field(default_factory=IOStats)
+    name: str                      # identity label, not a metric: never merged
+    hits: int = counter()
+    bytes_served: int = counter()
+    admitted: int = counter()
+    bytes_stored: int = gauge()    # current occupancy: evictions shrink it
+    evictions: int = counter()
+    expired: int = counter()       # TTL expiries (counted apart from evictions)
+    rejected: int = counter()      # flash admissions refused (unpopular)
+    io: IOStats = counter(factory=IOStats)
 
 
 @dataclasses.dataclass
@@ -87,10 +88,10 @@ class TenantStats:
     """Per-job view of the shared tier: reads charged to the reading
     tenant, storage/evictions charged to the owning (admitting) tenant."""
 
-    tenant: str
-    dram: TierStats = dataclasses.field(default_factory=lambda: TierStats("dram"))
-    flash: TierStats = dataclasses.field(default_factory=lambda: TierStats("flash"))
-    misses: int = 0
+    tenant: str                    # identity label, not a metric: never merged
+    dram: TierStats = counter(factory=lambda: TierStats("dram"))
+    flash: TierStats = counter(factory=lambda: TierStats("flash"))
+    misses: int = counter()
 
     @property
     def hits(self) -> int:

@@ -26,7 +26,7 @@ stream — the ``DPPSession`` monitor owns the clock and actuation.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +62,32 @@ class Decision:
     worker_delta: int                # +launch / -drain / 0
     prefetch_depth: Optional[int]    # None = leave the planner alone
     reason: str
+
+
+def observation_from_delta(delta: Dict[str, float],
+                           interval_s: float) -> Observation:
+    """Build one tick's ``Observation`` from a registry snapshot delta
+    (``Snapshot.delta(prev)``) — counters arrive as per-tick differences,
+    gauges as current levels.
+
+    The formulas are exactly the session monitor's original inline
+    polling arithmetic, so a controller fed registry deltas emits
+    byte-for-byte the same decisions as the PR-4 heuristics (regression
+    test in ``tests/test_obs.py``).  Expected names: counters
+    ``client.stalls`` / ``client.wait_calls`` / ``fleet.busy_s``, gauges
+    ``fleet.buffered_batches`` / ``fleet.active_workers``.
+    """
+    active = int(delta.get("fleet.active_workers", 0))
+    d_waits = max(int(delta.get("client.wait_calls", 0)), 1)
+    stall_rate = max(int(delta.get("client.stalls", 0)), 0) / d_waits
+    wall = max(interval_s, 1e-6) * max(active, 1)
+    cpu_util = min(max(delta.get("fleet.busy_s", 0.0), 0.0) / wall, 1.0)
+    return Observation(
+        n_workers=active,
+        buffered_batches=int(delta.get("fleet.buffered_batches", 0)),
+        stall_rate=stall_rate,
+        cpu_util=cpu_util,
+    )
 
 
 class ElasticController:

@@ -16,15 +16,16 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.dpp.master import SessionState
+from repro.obs import NULL_TRACER, counter
 
 
 @dataclasses.dataclass
 class ClientMetrics:
-    batches: int = 0
-    rx_bytes: int = 0
-    stall_s: float = 0.0
-    stalls: int = 0
-    wait_calls: int = 0
+    batches: int = counter()
+    rx_bytes: int = counter()
+    stall_s: float = counter(0.0)
+    stalls: int = counter()
+    wait_calls: int = counter()
 
 
 class SessionFailed(RuntimeError):
@@ -58,12 +59,16 @@ class DPPClient:
         fanout: int = 4,                   # partitioned round-robin cap
         prefetcher=None,                   # optional PrefetchPlanner to poke
         master=None,                       # optional DPPMaster for state checks
+        tenant: Optional[str] = None,      # owning session (span label)
+        tracer=NULL_TRACER,                # span Tracer (obs layer)
     ):
         self.client_id = client_id
         self._all_workers = list(workers)
         self.fanout = fanout
         self.prefetcher = prefetcher
         self.master = master
+        self.tenant = tenant
+        self.tracer = tracer
         self.metrics = ClientMetrics()
         self._rr = 0
         # stable digest, NOT hash(): str hashing is randomized per process
@@ -135,12 +140,25 @@ class DPPClient:
                     # sweep is a zero-stall call, not stall time
                     if stalled:
                         self.metrics.stalls += 1
-                        self.metrics.stall_s += time.perf_counter() - t0
+                        t_now = time.perf_counter()
+                        self.metrics.stall_s += t_now - t0
+                        if self.tracer.enabled:
+                            self.tracer.record(
+                                "client.stall", t0, t_now,
+                                tenant=self.tenant or "",
+                                client=self.client_id,
+                            )
                     return batch
             stalled = True
             self._check_failed()
             self._note_stall()
-        self.metrics.stall_s += time.perf_counter() - t0
+        t_now = time.perf_counter()
+        self.metrics.stall_s += t_now - t0
         self.metrics.stalls += 1
+        if self.tracer.enabled:
+            self.tracer.record(
+                "client.stall", t0, t_now,
+                tenant=self.tenant or "", client=self.client_id,
+            )
         self._check_failed()
         return None

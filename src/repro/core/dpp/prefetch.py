@@ -24,15 +24,16 @@ from typing import List, Optional, Sequence, Tuple
 from repro.core.dpp.master import DPPMaster, Split
 from repro.core.reader import COALESCE_WINDOW, plan_reads
 from repro.core.warehouse import Table
+from repro.obs import counter
 
 
 @dataclasses.dataclass
 class PrefetchMetrics:
-    plans: int = 0                  # splits planned
-    splits_warmed: int = 0          # splits with at least one fill issued
-    bytes_fetched: int = 0          # storage bytes pulled ahead of workers
-    bytes_already_cached: int = 0   # planned bytes the cache already held
-    pokes: int = 0                  # stall-triggered wakeups from clients
+    plans: int = counter()                # splits planned
+    splits_warmed: int = counter()        # splits with at least one fill issued
+    bytes_fetched: int = counter()        # storage bytes pulled ahead of workers
+    bytes_already_cached: int = counter() # planned bytes the cache already held
+    pokes: int = counter()                # stall-triggered wakeups from clients
 
 
 class PrefetchPlanner:

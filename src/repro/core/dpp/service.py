@@ -20,12 +20,15 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 from repro.core.cache import StripeCache
-from repro.core.dpp.autoscale import ElasticController, ElasticPolicy, Observation
-from repro.core.dpp.client import DPPClient, SessionFailed
+from repro.core.dpp.autoscale import (
+    ElasticController, ElasticPolicy, observation_from_delta,
+)
+from repro.core.dpp.client import ClientMetrics, DPPClient, SessionFailed
 from repro.core.dpp.master import DPPMaster, SessionSpec
 from repro.core.dpp.prefetch import PrefetchPlanner
 from repro.core.dpp.worker import DPPWorker, WorkerMetrics
 from repro.core.warehouse import Table, Warehouse
+from repro.obs import NULL_TRACER, MetricsRegistry, merge_metrics
 
 
 class DPPSession:
@@ -48,12 +51,18 @@ class DPPSession:
         elastic_policy: Optional[ElasticPolicy] = None,
         engine: str = "numpy",
         clock: Callable[[], float] = time.time,
+        tracer=NULL_TRACER,
     ):
         self.spec = spec
         self.table = table
         self.name = name                   # tenant id for the stripe cache
         self._on_stop = on_stop            # e.g. release the tenant's share
         self.engine = engine               # TransformEngine for every worker
+        self.tracer = tracer
+        if tracer.enabled and not table.fs.tracer.enabled:
+            # storage/cache spans come from the shared fs: attach once,
+            # never downgrade a real tracer someone else installed
+            table.fs.attach_tracer(tracer)
         # injected clock (REPRO-C001): deadlines/scale-event timestamps are
         # testable without wall-clock sleeps; shared with the master
         self._clock = clock
@@ -97,9 +106,33 @@ class DPPSession:
             self._launch_worker()
         self.clients = [
             DPPClient(f"client{i}", self.workers, prefetcher=self.prefetcher,
-                      master=self.master)
+                      master=self.master, tenant=name, tracer=tracer)
             for i in range(n_clients)
         ]
+        # unified metrics registry: every signal the monitor (and the
+        # Table-7 stall report) consumes comes from one snapshot/delta API
+        self.registry = MetricsRegistry()
+        self.registry.register("worker", self.worker_metrics)
+        self.registry.register("client", self._client_metrics)
+        self.registry.register_value(
+            "fleet.buffered_batches",
+            lambda: sum(w.buffered for w in self.workers), kind="gauge",
+        )
+        self.registry.register_value(
+            "fleet.active_workers",
+            lambda: sum(1 for w in self.workers if not w.retired),
+            kind="gauge",
+        )
+        # one computed counter, not per-worker values: a single sum keeps
+        # the float accumulation order identical to the old inline monitor
+        # arithmetic, so controller decisions stay byte-for-byte the same
+        self.registry.register_value(
+            "fleet.busy_s",
+            lambda: sum(
+                w.metrics.busy_s for w in self.workers + self._graveyard
+            ),
+            kind="counter",
+        )
         self.auto_scale = auto_scale
         self.monitor_interval_s = monitor_interval_s
         self._stop = threading.Event()
@@ -113,7 +146,7 @@ class DPPSession:
         w = DPPWorker(
             f"w{self._wid}", self.master, self.table,
             fail_after_splits=fail_after, tensor_cache=self.tensor_cache,
-            tenant=self.name, engine=self.engine,
+            tenant=self.name, engine=self.engine, tracer=self.tracer,
         )
         self._wid += 1
         self.workers.append(w)
@@ -150,9 +183,7 @@ class DPPSession:
     # -- monitor: health + autoscaling -----------------------------------------
 
     def _monitor_loop(self) -> None:
-        last_stalls = 0
-        last_waits = 0
-        last_busy = 0.0
+        prev = None                    # previous registry Snapshot
         while not self._stop.is_set() and not self.master.finished:
             time.sleep(self.monitor_interval_s)
             # health: restart dead workers (stateless -> no restore needed);
@@ -181,26 +212,16 @@ class DPPSession:
                         c.rebind(self.workers)
             if not self.auto_scale:
                 continue
-            # observation: stall *rate* (stalled get_batch fraction since
-            # the last tick) + fleet queue depth + worker utilization
-            buffered = sum(w.buffered for w in self.workers)
-            stalls = sum(c.metrics.stalls for c in self.clients)
-            waits = sum(c.metrics.wait_calls for c in self.clients)
-            # graveyard included: removing a worker must not make the busy
-            # delta go negative (clamped to 0) and fake an idle tick
-            busy = sum(
-                w.metrics.busy_s for w in self.workers + self._graveyard
+            # observation via the registry: counters (stalls, waits, busy)
+            # arrive as per-tick deltas, gauges (queue depth, active
+            # workers) as levels — the arithmetic lives with the
+            # controller in autoscale.observation_from_delta
+            snap = self.registry.snapshot()
+            delta = snap.delta(prev)
+            prev = snap
+            decision = self.controller.observe(
+                observation_from_delta(delta, self.monitor_interval_s)
             )
-            active = [w for w in self.workers if not w.retired]
-            d_waits = max(waits - last_waits, 1)
-            stall_rate = max(stalls - last_stalls, 0) / d_waits
-            wall = max(self.monitor_interval_s, 1e-6) * max(len(active), 1)
-            cpu_util = min(max(busy - last_busy, 0.0) / wall, 1.0)
-            last_stalls, last_waits, last_busy = stalls, waits, busy
-            decision = self.controller.observe(Observation(
-                n_workers=len(active), buffered_batches=buffered,
-                stall_rate=stall_rate, cpu_util=cpu_util,
-            ))
             if decision.prefetch_depth is not None and self.prefetcher is not None:
                 self.prefetcher.set_depth(decision.prefetch_depth)
             if decision.worker_delta > 0:
@@ -210,6 +231,7 @@ class DPPSession:
                 for c in self.clients:
                     c.rebind(self.workers)
             elif decision.worker_delta < 0:
+                active = [w for w in self.workers if not w.retired]
                 victims = active[decision.worker_delta:]
                 for v in victims:
                     # graceful drain: finish + deliver the in-flight split,
@@ -239,6 +261,12 @@ class DPPSession:
             total.merge(w.metrics)
         return total
 
+    def _client_metrics(self) -> ClientMetrics:
+        total = ClientMetrics()
+        for c in self.clients:
+            merge_metrics(total, c.metrics)
+        return total
+
     def run_to_completion(
         self, max_batches: Optional[int] = None, timeout_s: float = 120.0
     ) -> List[Dict[str, np.ndarray]]:
@@ -253,18 +281,25 @@ class DPPSession:
         out = []
         deadline = self._clock() + timeout_s
         try:
-            while self._clock() < deadline:
-                # short poll: the post-exhaustion drain check costs one poll
-                # interval, not a whole client timeout (which would be billed
-                # as trainer stall time and swamp the Table-7 metric)
-                batch = self.clients[0].get_batch(timeout=0.25)
-                if batch is not None:
-                    out.append(batch)
-                    if max_batches and len(out) >= max_batches:
+            # session.run bounds the tenant's wall clock: the stall report
+            # divides every other span's time by this one's duration
+            with self.tracer.span("session.run", tenant=self.name) as sp:
+                while self._clock() < deadline:
+                    # short poll: the post-exhaustion drain check costs one
+                    # poll interval, not a whole client timeout (which would
+                    # be billed as trainer stall time and swamp the Table-7
+                    # metric)
+                    batch = self.clients[0].get_batch(timeout=0.25)
+                    if batch is not None:
+                        out.append(batch)
+                        if max_batches and len(out) >= max_batches:
+                            break
+                        continue
+                    if self.master.finished and all(
+                        w.buffered == 0 for w in self.workers
+                    ):
                         break
-                    continue
-                if self.master.finished and all(w.buffered == 0 for w in self.workers):
-                    break
+                sp.set(batches=len(out))
         finally:
             self.stop()
         return out
@@ -287,9 +322,13 @@ class DPPService:
         tensor_cache=None,
         enable_stripe_cache: bool = True,
         clock: Callable[[], float] = time.time,
+        tracer=NULL_TRACER,
     ):
         self.warehouse = warehouse
         self._clock = clock
+        self.tracer = tracer
+        if tracer.enabled:
+            warehouse.fs.attach_tracer(tracer)
         self.stripe_cache = stripe_cache or (
             StripeCache() if enable_stripe_cache else None
         )
@@ -324,6 +363,7 @@ class DPPService:
             # validate the share up front (so an over-committed request
             # fails before any session machinery spins up) ...
             self.stripe_cache.tenancy.set_share(name, dram_share, flash_share)
+        kw.setdefault("tracer", self.tracer)
         try:
             sess = DPPSession(
                 spec, self.warehouse.table(spec.table), name=name,

@@ -22,6 +22,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.dpp.master import SessionSpec, Split
+from repro.obs import counter, gauge
 
 
 def pipeline_fingerprint(spec: SessionSpec) -> str:
@@ -35,12 +36,12 @@ def pipeline_fingerprint(spec: SessionSpec) -> str:
 
 @dataclasses.dataclass
 class CacheStats:
-    hits: int = 0
-    misses: int = 0
-    bytes_stored: int = 0
-    cpu_s_saved: float = 0.0
-    evictions: int = 0
-    rejected: int = 0              # inserts larger than the whole cache
+    hits: int = counter()
+    misses: int = counter()
+    bytes_stored: int = gauge()    # current occupancy: evictions shrink it
+    cpu_s_saved: float = counter(0.0)
+    evictions: int = counter()
+    rejected: int = counter()      # inserts larger than the whole cache
 
     @property
     def hit_rate(self) -> float:

@@ -37,33 +37,35 @@ from repro.core.engine import make_engine
 from repro.core.reader import TableReader
 from repro.core.transforms import materialize_dlrm_batch
 from repro.core.warehouse import Table
+from repro.obs import NULL_TRACER, counter, merge_metrics
 
 
 @dataclasses.dataclass
 class WorkerMetrics:
-    storage_rx_bytes: int = 0          # compressed, served by storage nodes
-    cache_rx_bytes: int = 0            # compressed, served by the stripe cache
-    extract_out_bytes: int = 0         # decoded columnar bytes (transform RX)
-    tx_bytes: int = 0                  # materialized tensor bytes (transform TX)
-    extract_s: float = 0.0
-    transform_s: float = 0.0
-    load_s: float = 0.0
-    splits_done: int = 0
-    data_errors: int = 0               # splits reported as data_error
-    rows_done: int = 0                 # rows served to clients
-    stripes_read: int = 0              # stripes fetched + decoded
-    rows_decoded: int = 0              # stripe rows decoded (incl. trim waste)
-    rows_from_cache: int = 0           # rows served by tensor-cache hits
+    storage_rx_bytes: int = counter()  # compressed, served by storage nodes
+    cache_rx_bytes: int = counter()    # compressed, served by the stripe cache
+    extract_out_bytes: int = counter() # decoded columnar bytes (transform RX)
+    tx_bytes: int = counter()          # materialized tensor bytes (transform TX)
+    extract_s: float = counter(0.0)
+    transform_s: float = counter(0.0)
+    load_s: float = counter(0.0)
+    splits_done: int = counter()
+    data_errors: int = counter()       # splits reported as data_error
+    rows_done: int = counter()         # rows served to clients
+    stripes_read: int = counter()      # stripes fetched + decoded
+    rows_decoded: int = counter()      # stripe rows decoded (incl. trim waste)
+    rows_from_cache: int = counter()   # rows served by tensor-cache hits
     # per-engine transform accounting (mirrored from EngineStats — §7.2):
-    fused_features: int = 0            # op executions served by fused kernels
-    fallback_features: int = 0         # op executions served per-feature
-    kernel_launches: int = 0           # fused pallas_calls + per-feature calls
-    transform_fused_s: float = 0.0     # transform_s attribution: fused path
-    transform_fallback_s: float = 0.0  # transform_s attribution: numpy path
+    fused_features: int = counter()            # ops served by fused kernels
+    fallback_features: int = counter()         # ops served per-feature
+    kernel_launches: int = counter()           # fused + per-feature calls
+    transform_fused_s: float = counter(0.0)    # transform_s: fused path
+    transform_fallback_s: float = counter(0.0) # transform_s: numpy path
 
     def merge(self, o: "WorkerMetrics") -> None:
-        for f in dataclasses.fields(self):
-            setattr(self, f.name, getattr(self, f.name) + getattr(o, f.name))
+        # summing behavior comes from the per-field counter/gauge
+        # metadata, not from blindly adding every dataclass field
+        merge_metrics(self, o)
 
     @property
     def busy_s(self) -> float:
@@ -117,11 +119,13 @@ class DPPWorker:
         prefetch_stripes: int = 2,                 # extract-ahead depth
         tenant: Optional[str] = None,              # owning job for cache shares
         engine="numpy",                            # TransformEngine name/factory
+        tracer=NULL_TRACER,                        # span Tracer (obs layer)
     ):
         self.worker_id = worker_id
         self.master = master
         self.table = table
         self.tenant = tenant
+        self.tracer = tracer
         self.spec = master.spec
         self.pipeline = self.spec.pipeline()       # pulled from Master at startup
         # transform stage executor (§7.2): "numpy" = per-feature reference,
@@ -163,7 +167,7 @@ class DPPWorker:
     def _run(self) -> None:
         reader = TableReader(
             self.table, list(self.spec.feature_ids), record_popularity=False,
-            tenant=self.tenant,
+            tenant=self.tenant, tracer=self.tracer,
         )
         while not self._stop.is_set():
             if self._drain.is_set():
@@ -343,6 +347,11 @@ class DPPWorker:
                 # engine counters are cumulative per exclusive engine, so a
                 # straight mirror keeps the worker metric cumulative too
                 es = self.engine.stats
+                if self.tracer.enabled:
+                    # before the mirror below, m still holds the previous
+                    # cumulative per-path seconds — the difference is this
+                    # stripe's fused/fallback attribution
+                    self._trace_transform(t2, t3, es, m, split.split_id)
                 m.fused_features = es.fused_features
                 m.fallback_features = es.fallback_features
                 m.kernel_launches = es.kernel_launches
@@ -367,7 +376,14 @@ class DPPWorker:
                 pending.append((env, sr.batch.labels, sr.batch.num_rows))
                 pending_rows += sr.batch.num_rows
                 _drain(final=False)
-                m.load_s += time.perf_counter() - t3
+                t_load = time.perf_counter()
+                m.load_s += t_load - t3
+                if self.tracer.enabled:
+                    self.tracer.record(
+                        "load.materialize", t3, t_load,
+                        tenant=self.tenant or "", worker=self.worker_id,
+                        split=split.split_id,
+                    )
         except BaseException:
             abort.set()   # unblock the producer; it exits without a consumer
             raise
@@ -375,7 +391,14 @@ class DPPWorker:
         producer.join()
         t4 = time.perf_counter()
         _drain(final=True)
-        m.load_s += time.perf_counter() - t4
+        t_load = time.perf_counter()
+        m.load_s += t_load - t4
+        if self.tracer.enabled:
+            self.tracer.record(
+                "load.materialize", t4, t_load,
+                tenant=self.tenant or "", worker=self.worker_id,
+                split=split.split_id,
+            )
 
         if self.tensor_cache is not None:
             self.tensor_cache.put(key, out, cpu_s=time.perf_counter() - t_split0)
@@ -384,6 +407,25 @@ class DPPWorker:
         m.splits_done += 1
         m.rows_done += n_served
         return out
+
+    def _trace_transform(self, t0: float, t1: float, es, m: WorkerMetrics,
+                         split_id: int) -> None:
+        """Record this stripe's transform interval, partitioned into
+        fused/fallback spans by the engine's per-path second deltas
+        (``m`` must still hold the pre-mirror cumulative values)."""
+        d_fused = es.fused_s - m.transform_fused_s
+        d_fallback = es.fallback_s - m.transform_fallback_s
+        labels = dict(tenant=self.tenant or "", worker=self.worker_id,
+                      split=split_id)
+        total = d_fused + d_fallback
+        if total <= 0.0:
+            self.tracer.record("transform.fallback", t0, t1, **labels)
+            return
+        cut = t0 + (t1 - t0) * (d_fused / total)
+        if d_fused > 0.0:
+            self.tracer.record("transform.fused", t0, cut, **labels)
+        if d_fallback > 0.0:
+            self.tracer.record("transform.fallback", cut, t1, **labels)
 
     # -- serving to clients ------------------------------------------------------
 

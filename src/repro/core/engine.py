@@ -45,6 +45,7 @@ from repro.core.transforms import (
     TransformPipeline,
     TransformSpec,
 )
+from repro.obs import counter
 
 # Op codes mirror repro.kernels.fused_transform (kept import-light: jax is
 # only pulled in when a PallasEngine actually launches a wave).
@@ -78,12 +79,12 @@ def _subnormal(arr: np.ndarray) -> bool:
 class EngineStats:
     """Cumulative per-engine accounting (mirrored into ``WorkerMetrics``)."""
 
-    fused_features: int = 0      # op executions served by a fused kernel
-    fallback_features: int = 0   # op executions served by per-feature numpy
-    demoted_features: int = 0    # fused-eligible ops demoted at run time
-    kernel_launches: int = 0     # fused pallas_calls + per-feature op calls
-    fused_s: float = 0.0         # transform_s attribution: fused path
-    fallback_s: float = 0.0      # transform_s attribution: numpy path
+    fused_features: int = counter()      # op executions served by a fused kernel
+    fallback_features: int = counter()   # op executions served by per-feature numpy
+    demoted_features: int = counter()    # fused-eligible ops demoted at run time
+    kernel_launches: int = counter()     # fused pallas_calls + per-feature op calls
+    fused_s: float = counter(0.0)        # transform_s attribution: fused path
+    fallback_s: float = counter(0.0)     # transform_s attribution: numpy path
 
 
 # ---------------------------------------------------------------------------

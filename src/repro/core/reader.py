@@ -29,6 +29,7 @@ from repro.core import dwrf
 from repro.core.schema import ColumnBatch
 from repro.core.tectonic import ExtentRead, IOStats, TectonicFS
 from repro.core.warehouse import PartitionMeta, Table
+from repro.obs import NULL_TRACER
 
 COALESCE_WINDOW = int(1.25 * 1024 * 1024)   # §7.5
 
@@ -183,6 +184,7 @@ class TableReader:
         coalesce_window: int = COALESCE_WINDOW,
         record_popularity: bool = True,
         tenant: Optional[str] = None,
+        tracer=NULL_TRACER,
     ):
         self.table = table
         self.feature_ids = list(feature_ids)
@@ -190,6 +192,7 @@ class TableReader:
         self.record_popularity = record_popularity
         # job identity for the stripe cache's per-tenant shares/accounting
         self.tenant = tenant
+        self.tracer = tracer
         self._job_feature_bytes: Dict[int, float] = {}
 
     def _fetch_streams(
@@ -245,7 +248,14 @@ class TableReader:
         rows_decoded = 0
         for si in sorted(per_stripe):
             stripe = footer.stripes[si]
-            part = dwrf.decode_stripe_features(stripe, per_stripe[si], self.feature_ids)
+            with self.tracer.span(
+                "extract.decode", tenant=self.tenant or "",
+                path=meta.path, stripe=si,
+            ) as sp:
+                part = dwrf.decode_stripe_features(
+                    stripe, per_stripe[si], self.feature_ids
+                )
+                sp.set(rows=part.num_rows)
             rows_decoded += part.num_rows
             part, _, _ = _trim_stripe(part, stripe, lo, hi)
             parts.append(part)
@@ -297,9 +307,14 @@ class TableReader:
                 stripe_indices=[si], stripes_total=len(footer.stripes),
             )
             per_stripe, feature_bytes, io = self._fetch_streams(meta, plan)
-            part = dwrf.decode_stripe_features(
-                stripe, per_stripe.get(si, {}), self.feature_ids
-            )
+            with self.tracer.span(
+                "extract.decode", tenant=self.tenant or "",
+                path=meta.path, stripe=si,
+            ) as sp:
+                part = dwrf.decode_stripe_features(
+                    stripe, per_stripe.get(si, {}), self.feature_ids
+                )
+                sp.set(rows=part.num_rows)
             rows_decoded = part.num_rows
             part, t0, t1 = _trim_stripe(part, stripe, lo, hi)
             self._record_feature_bytes(feature_bytes)

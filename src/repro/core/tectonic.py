@@ -19,6 +19,8 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import NULL_TRACER, counter, merge_metrics
+
 BLOCK_BYTES = 8 * 1024 * 1024         # Tectonic chunk size (§7.5)
 REPLICATION = 3
 
@@ -47,11 +49,11 @@ SSD = MediaSpec(name="ssd", seek_ms=0.08, transfer_MBps=2800.0, capacity_TB=3.84
 
 @dataclasses.dataclass
 class IOStats:
-    num_ios: int = 0
-    bytes_read: int = 0
-    seek_time_s: float = 0.0
-    transfer_time_s: float = 0.0
-    io_sizes: List[int] = dataclasses.field(default_factory=list)
+    num_ios: int = counter()
+    bytes_read: int = counter()
+    seek_time_s: float = counter(0.0)
+    transfer_time_s: float = counter(0.0)
+    io_sizes: List[int] = counter(factory=list)
 
     @property
     def total_time_s(self) -> float:
@@ -65,11 +67,7 @@ class IOStats:
         self.io_sizes.append(nbytes)
 
     def merge(self, other: "IOStats") -> None:
-        self.num_ios += other.num_ios
-        self.bytes_read += other.bytes_read
-        self.seek_time_s += other.seek_time_s
-        self.transfer_time_s += other.transfer_time_s
-        self.io_sizes.extend(other.io_sizes)
+        merge_metrics(self, other)
 
     def percentiles(self) -> Dict[str, float]:
         if not self.io_sizes:
@@ -142,6 +140,7 @@ class TectonicFS:
         self._rng = np.random.default_rng(seed)
         self.stats = IOStats()
         self.cache = None                  # optional StripeCache (attach_cache)
+        self.tracer = NULL_TRACER          # optional span Tracer (attach_tracer)
         # many sessions' worker threads read one fs: keep the fleet/node
         # accounting consistent (the payload path itself is immutable bytes)
         self._stats_lock = threading.Lock()
@@ -159,6 +158,13 @@ class TectonicFS:
             # (data, blocks, generation) snapshot can never straddle the
             # cache swap
             self.cache = cache
+
+    def attach_tracer(self, tracer) -> None:
+        """Install a span ``Tracer``: subsequent extent reads record
+        ``storage.read`` / ``cache.fill`` spans and ``cache.hit`` /
+        ``cache.miss`` instants, labeled with tenant/path/tier/bytes."""
+        with self._mutate_lock:
+            self.tracer = tracer
 
     # -- write path ---------------------------------------------------------
 
@@ -268,10 +274,14 @@ class TectonicFS:
             if self.cache is None:
                 block_idx = off // BLOCK_BYTES
                 node = self.nodes[refs[min(block_idx, len(refs) - 1)].node_ids[0]]
-                with self._stats_lock:
-                    node.read(length)
-                    self.stats.record(length, node.media)
-                self._simulate_latency(node.media, length)
+                with self.tracer.span(
+                    "storage.read", tenant=tenant or "", path=path,
+                    bytes=length,
+                ):
+                    with self._stats_lock:
+                        node.read(length)
+                        self.stats.record(length, node.media)
+                    self._simulate_latency(node.media, length)
                 storage_b += length
                 out.append(data[off: off + length])
                 continue
@@ -287,10 +297,16 @@ class TectonicFS:
                     return
                 block_idx = pending_off // BLOCK_BYTES
                 node = self.nodes[refs[min(block_idx, len(refs) - 1)].node_ids[0]]
-                with self._stats_lock:
-                    node.read(pending_len)
-                    self.stats.record(pending_len, node.media)
-                self._simulate_latency(node.media, pending_len)
+                # cache.fill: the storage I/O behind a merged miss run —
+                # the fill cost the cache tier pays on behalf of this read
+                with self.tracer.span(
+                    "cache.fill", tenant=tenant or "", path=path,
+                    bytes=pending_len,
+                ):
+                    with self._stats_lock:
+                        node.read(pending_len)
+                        self.stats.record(pending_len, node.media)
+                    self._simulate_latency(node.media, pending_len)
                 storage_b += pending_len
                 pending_len = 0
 
@@ -305,8 +321,17 @@ class TectonicFS:
                         dram_b += seg_len
                     else:
                         flash_b += seg_len
+                    if self.tracer.enabled:
+                        self.tracer.instant(
+                            "cache.hit", tenant=tenant or "", tier=hit.tier,
+                            bytes=seg_len,
+                        )
                     parts.append(hit.payload)
                     continue
+                if self.tracer.enabled:
+                    self.tracer.instant(
+                        "cache.miss", tenant=tenant or "", bytes=seg_len,
+                    )
                 try:
                     blob = data[seg_off: seg_off + seg_len]
                 except BaseException:

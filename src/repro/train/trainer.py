@@ -26,6 +26,7 @@ from repro.distributed.context import sharding_context
 from repro.distributed.sharding import TRAIN_RULES
 from repro.models import build_model
 from repro.models.common import partition_specs
+from repro.obs import NULL_TRACER, gauge
 from repro.optim import OptimizerConfig, adamw_init, adamw_update
 
 
@@ -40,11 +41,14 @@ class TrainerConfig:
 
 @dataclasses.dataclass
 class StepMetrics:
-    step: int
-    loss: float
-    grad_norm: float
-    step_time_s: float
-    stall_s: float
+    """Per-step point readings — gauges, not counters: each row is one
+    step's level, never accumulated across steps by ``merge_metrics``."""
+
+    step: int = gauge(merge="last")
+    loss: float = gauge(0.0, merge="last")
+    grad_norm: float = gauge(0.0, merge="last")
+    step_time_s: float = gauge(0.0, merge="last")
+    stall_s: float = gauge(0.0, merge="last")
 
 
 class Trainer:
@@ -55,7 +59,9 @@ class Trainer:
         trainer_cfg: Optional[TrainerConfig] = None,
         mesh: Optional[Any] = None,
         rules=TRAIN_RULES,
+        tracer=NULL_TRACER,
     ):
+        self.tracer = tracer
         self.model_cfg = model_cfg
         self.model = build_model(model_cfg)
         self.opt_cfg = opt_cfg or OptimizerConfig()
@@ -138,6 +144,11 @@ class Trainer:
             params, opt, loss, gnorm = self._train_step(params, opt, batch)
             step += 1
             t2 = time.perf_counter()
+            if self.tracer.enabled:
+                if t1 > t0:
+                    # batch-fetch wait: trainer-side stall (Table 7)
+                    self.tracer.record("client.stall", t0, t1, step=step)
+                self.tracer.record("train.step", t1, t2, step=step)
             m = StepMetrics(
                 step=step, loss=float(loss), grad_norm=float(gnorm),
                 step_time_s=t2 - t1, stall_s=t1 - t0,

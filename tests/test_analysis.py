@@ -302,10 +302,13 @@ def test_k002_negative_transform_name_counts(tmp_path):
 WORKER_METRICS = """\
     import dataclasses
 
+    from repro.obs import counter, gauge
+
     @dataclasses.dataclass
     class WorkerMetrics:
-        batches: int = 0
-        bytes_read: int = 0
+        batches: int = counter()
+        bytes_read: int = counter()
+        bytes_stored: int = gauge()
 """
 
 
@@ -377,6 +380,77 @@ def test_m002_negative_gauge_and_increment(tmp_path):
         """,
     })
     assert _findings(repo, "REPRO-M002") == []
+
+
+def test_m001_drift_when_no_metric_class_discovered(tmp_path):
+    repo = _repo(tmp_path, {
+        "src/repro/core/foo.py": """\
+            import dataclasses
+
+            @dataclasses.dataclass
+            class NotMetrics:
+                batches: int = 0
+        """,
+    })
+    f = _findings(repo, "REPRO-M001")
+    assert len(f) == 1 and "no metric class discovered" in f[0].message
+
+
+def test_m001_discovery_needs_no_hand_kept_list(tmp_path):
+    # a metric class in a brand-new module is picked up automatically
+    repo = _repo(tmp_path, {
+        "src/repro/core/shiny/new_module.py": WORKER_METRICS,
+        "benchmarks/bench_x.py": """\
+            def main(sess):
+                m = sess.worker_metrics()
+                return m.batches + m.bytes_stored + m.bogus
+        """,
+    })
+    f = _bench_findings(repo)
+    assert len(f) == 1 and ".bogus" in f[0].message
+
+
+# -- REPRO-S001: span hygiene ------------------------------------------------
+
+
+def test_s001_span_assigned_to_variable(tmp_path):
+    repo = _repo(tmp_path, {"src/repro/core/foo.py": """\
+        class Thing:
+            def work(self):
+                h = self.tracer.span("storage.read")
+                h.__enter__()
+    """})
+    f = _findings(repo, "REPRO-S001")
+    assert len(f) == 1 and f[0].symbol == "Thing.work"
+
+
+def test_s001_bare_span_call_expression(tmp_path):
+    repo = _repo(tmp_path, {"src/repro/core/foo.py": """\
+        def work(tracer):
+            tracer.span("cache.fill", bytes=1)
+    """})
+    assert len(_findings(repo, "REPRO-S001")) == 1
+
+
+def test_s001_with_span_and_atomic_apis_ok(tmp_path):
+    repo = _repo(tmp_path, {"src/repro/core/foo.py": """\
+        class Thing:
+            def work(self, row):
+                with self.tracer.span("storage.read") as sp:
+                    sp.set(bytes=2)
+                self.tracer.record("client.stall", 0.0, 1.0)
+                self.tracer.instant("cache.hit")
+                return row.span("not-a-tracer")   # unrelated .span method
+    """})
+    assert _findings(repo, "REPRO-S001") == []
+
+
+def test_s001_scope_is_core_only(tmp_path):
+    repo = _repo(tmp_path, {"src/repro/train/foo.py": """\
+        def work(tracer):
+            return tracer.span("train.step")
+    """})
+    assert _findings(repo, "REPRO-S001") == []
 
 
 # -- REPRO-T001/T002: thread hygiene -----------------------------------------
@@ -560,7 +634,7 @@ def test_cli_list_rules(capsys):
     out = capsys.readouterr().out
     for rid in all_rules():
         assert rid in out
-    assert len(all_rules()) == 10
+    assert len(all_rules()) == 11
 
 
 def test_rule_catalog_is_stable():
@@ -569,5 +643,6 @@ def test_rule_catalog_is_stable():
         "REPRO-K001", "REPRO-K002",
         "REPRO-L001", "REPRO-L002", "REPRO-L003",
         "REPRO-M001", "REPRO-M002",
+        "REPRO-S001",
         "REPRO-T001", "REPRO-T002",
     ]

@@ -1,0 +1,93 @@
+"""Fixture tests for ``scripts/bench_diff.py`` (benchmark trend gate)."""
+from __future__ import annotations
+
+import importlib.util
+import json
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+_spec = importlib.util.spec_from_file_location(
+    "bench_diff", REPO / "scripts" / "bench_diff.py"
+)
+bench_diff = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bench_diff)
+
+
+def _report(**sections) -> dict:
+    return {
+        "mode": "quick",
+        "sections": {
+            name: {
+                "status": body.get("status", "ok"),
+                "metrics": [
+                    {"name": n, "us_per_call": us, "derived": ""}
+                    for n, us in body.get("metrics", [])
+                ],
+            }
+            for name, body in sections.items()
+        },
+    }
+
+
+def _write(tmp_path, name, report) -> str:
+    p = tmp_path / name
+    p.write_text(json.dumps(report))
+    return str(p)
+
+
+def test_clean_diff_exits_zero(tmp_path, capsys):
+    old = _report(dpp={"metrics": [("dpp.extract", 100.0)]})
+    new = _report(dpp={"metrics": [("dpp.extract", 110.0)]})
+    rc = bench_diff.main([_write(tmp_path, "old.json", old),
+                          _write(tmp_path, "new.json", new)])
+    assert rc == 0
+    assert "ok" in capsys.readouterr().out
+
+
+def test_slowdown_past_threshold_exits_nonzero(tmp_path, capsys):
+    old = _report(dpp={"metrics": [("dpp.extract", 100.0)]})
+    new = _report(dpp={"metrics": [("dpp.extract", 140.0)]})
+    rc = bench_diff.main([_write(tmp_path, "old.json", old),
+                          _write(tmp_path, "new.json", new)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "REGRESSION" in out and "dpp.extract" in out
+
+
+def test_threshold_is_configurable(tmp_path):
+    old = _report(dpp={"metrics": [("dpp.extract", 100.0)]})
+    new = _report(dpp={"metrics": [("dpp.extract", 140.0)]})
+    rc = bench_diff.main([_write(tmp_path, "old.json", old),
+                          _write(tmp_path, "new.json", new),
+                          "--threshold", "0.5"])
+    assert rc == 0
+
+
+def test_status_flip_to_failed_is_regression(tmp_path, capsys):
+    old = _report(engine={"metrics": []})
+    new = _report(engine={"status": "failed: boom", "metrics": []})
+    rc = bench_diff.main([_write(tmp_path, "old.json", old),
+                          _write(tmp_path, "new.json", new)])
+    assert rc == 1
+    assert "ok -> failed" in capsys.readouterr().out
+
+
+def test_added_and_removed_rows_are_notes_not_failures(tmp_path, capsys):
+    old = _report(dpp={"metrics": [("dpp.gone", 50.0)]})
+    new = _report(dpp={"metrics": [("dpp.fresh", 50.0)]},
+                  obs={"metrics": [("obs.null_span", 0.3)]})
+    rc = bench_diff.main([_write(tmp_path, "old.json", old),
+                          _write(tmp_path, "new.json", new)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "dpp.fresh" in out and "dpp.gone" in out and "note" in out
+
+
+def test_zero_baseline_rows_are_skipped(tmp_path):
+    # flag-style rows emit 0.0 us; they must never divide-by-zero or flag
+    old = _report(faults={"metrics": [("faults.stall_driven_scaleup", 0.0)]})
+    new = _report(faults={"metrics": [("faults.stall_driven_scaleup", 9.9)]})
+    rc = bench_diff.main([_write(tmp_path, "old.json", old),
+                          _write(tmp_path, "new.json", new)])
+    assert rc == 0
