@@ -1,0 +1,116 @@
+"""Concurrency sanitizers: zero-cost-when-off proof + instrumented cost.
+
+The sanitizer suite (docs/static_analysis.md, "runtime sanitizers") is
+opt-in: the ``raced``/``lockdep`` fixtures and ``sched.controlled`` only
+patch class protocol and lock factories inside their context managers.
+This section proves the off state is *exactly* free, mirroring the
+``bench_obs.py`` zero-cost-when-disabled gate:
+
+  (a) **structural 0%** — after every sanitizer context exits,
+      ``threading.Lock``/``RLock``, ``queue.Queue.put/get`` and the
+      instrumented classes' ``__getattribute__``/``__setattr__``/
+      ``__init__`` are identity-equal to the pristine objects.  The
+      uninstrumented path therefore executes byte-identical code: the
+      overhead is 0% by construction, not by measurement.
+  (b) **measured bound** — the same guarded-bump loop is timed pristine
+      vs after a full instrument/restore cycle; the delta must stay
+      under a loose budget that cleanly separates "restored" from
+      "accidentally left on" (instrumented attribute access is >10x).
+  (c) **cost-when-on** — the instrumented loop is timed for the record
+      so the price of turning the fixture on is visible in trend data.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+from benchmarks.common import emit, time_us
+from repro.analysis import lockdep as ld
+from repro.analysis import racedep as rd
+from repro.analysis import sched as sc
+
+# loose on purpose: timing jitter is real, but a leaked patch costs
+# >1000% here, so anything under this bound means "restored"
+OVERHEAD_BUDGET_PCT = 10.0
+
+
+def _make_probe() -> type:
+    """Fresh guarded-counter class: one lock acquire + two attr accesses
+    per bump — the same shape the racedep fixture instruments on real
+    classes.  A *new* class (new code objects) per measurement keeps the
+    adaptive interpreter's per-site specialization state independent
+    across the pristine / instrumented / restored timings."""
+
+    class Probe:
+        def __init__(self) -> None:
+            self._lock = threading.Lock()
+            self.n = 0
+
+        def bump(self) -> None:
+            with self._lock:
+                self.n += 1
+
+    return Probe
+
+
+def _bump_us(cls: type, n: int) -> float:
+    """Per-call cost of ``cls().bump`` over a fresh instance."""
+    probe = cls()
+
+    def loop() -> None:
+        for _ in range(n):
+            probe.bump()
+
+    return time_us(loop) / n
+
+
+def run(quick: bool = False) -> None:
+    n = 20_000 if quick else 100_000
+
+    # pristine references BEFORE any sanitizer has ever patched
+    probe_cls = _make_probe()
+    real_lock, real_rlock = threading.Lock, threading.RLock
+    real_put, real_get = queue.Queue.put, queue.Queue.get
+    get0 = probe_cls.__getattribute__
+    set0 = probe_cls.__setattr__
+    init0 = probe_cls.__dict__["__init__"]
+
+    off_before_us = _bump_us(_make_probe(), n)
+    emit("sanitizers.bump_pristine", off_before_us, "per-call_us")
+
+    # (c) full stack on: lockdep graph + racedep attribute wrappers
+    with ld.patched(name_filter=lambda s: True) as graph:
+        with rd.instrument(graph, classes=[probe_cls]):
+            on_us = _bump_us(probe_cls, n)
+    emit("sanitizers.bump_instrumented", on_us,
+         f"x{on_us / max(off_before_us, 1e-9):.1f}_vs_pristine")
+
+    # exercise the scheduler's patch/restore cycle too (no exploration —
+    # just the controlled() context that CI's sched gate enters per run)
+    with sc.controlled(name_filter=lambda s: True):
+        pass
+
+    # (a) structural 0%: everything is the pristine object again
+    assert threading.Lock is real_lock, "sanitizers leaked threading.Lock"
+    assert threading.RLock is real_rlock, "sanitizers leaked threading.RLock"
+    assert queue.Queue.put is real_put, "sanitizers leaked Queue.put"
+    assert queue.Queue.get is real_get, "sanitizers leaked Queue.get"
+    assert probe_cls.__getattribute__ is get0, "racedep leaked __getattribute__"
+    assert probe_cls.__setattr__ is set0, "racedep leaked __setattr__"
+    assert "__getattribute__" not in probe_cls.__dict__
+    assert "__setattr__" not in probe_cls.__dict__
+    assert probe_cls.__dict__["__init__"] is init0, "racedep leaked __init__"
+    emit("sanitizers.off_identity", 0.0,
+         "restored=Lock,RLock,Queue.put,Queue.get,getattr,setattr,init")
+
+    # (b) measured bound on the restored path (fresh class: independent
+    # specialization state, same shape)
+    off_after_us = _bump_us(_make_probe(), n)
+    overhead_pct = 100.0 * (off_after_us - off_before_us) \
+        / max(off_before_us, 1e-9)
+    emit("sanitizers.off_overhead", off_after_us,
+         f"overhead_pct={overhead_pct:.2f}")
+    assert overhead_pct <= OVERHEAD_BUDGET_PCT, (
+        f"uninstrumented path slowed {overhead_pct:.2f}% after sanitizer "
+        f"teardown (budget {OVERHEAD_BUDGET_PCT}%): a patch leaked"
+    )

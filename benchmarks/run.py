@@ -36,6 +36,7 @@ SECTIONS = [
     "kernels",          # §7.2 fused transform + hot kernels
     "engine",           # §7.2 fused TransformEngine vs per-feature (ISSUE 5)
     "obs",              # telemetry overhead + Table-7 stall attribution
+    "sanitizers",       # race/interleaving sanitizers: zero-cost-when-off (ISSUE 8)
     "power",            # Fig 1
     "coordination",     # Figs 4/5/6, Table 2
 ]

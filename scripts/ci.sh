@@ -7,6 +7,13 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 # invariant gate: lock discipline, clock injection, kernel parity,
 # metrics contract, span hygiene, thread hygiene (docs/static_analysis.md)
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.analysis
+# concurrency sanitizers (docs/static_analysis.md "runtime sanitizers"):
+# raced-marked tests rerun real subsystems under the lockset race
+# detector, then the interleaving explorer checks every control-plane
+# scenario invariant under all bounded schedules — both ship with an
+# empty baseline, so any finding fails CI
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m raced tests/test_racedep.py
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.analysis.sched -q
 # telemetry smoke: traced two-tenant run -> artifact -> stall-report gate
 # (Perfetto-loadable trace, shares sum to 100, no span left open)
 OBS_TRACE="$(mktemp /tmp/obs_trace.XXXXXX.json)"

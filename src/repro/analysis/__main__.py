@@ -3,14 +3,20 @@
   PYTHONPATH=src python -m repro.analysis               # run the gate
   PYTHONPATH=src python -m repro.analysis --list-rules  # rule catalog
   PYTHONPATH=src python -m repro.analysis --write-baseline
+  PYTHONPATH=src python -m repro.analysis --json        # JSON lines
 
 Exit status: 0 when every finding is baselined or suppressed, 1 when new
 findings exist, 2 on usage errors.  ``scripts/ci.sh`` runs this between
 pytest and the benchmark smoke.
+
+``--json`` emits one JSON object per finding (``status`` is ``"new"`` or
+``"baselined"``) instead of the human rendering — same exit codes — so
+CI artifacts and ``bench_diff``-style tooling can consume the gate.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 from pathlib import Path
 from typing import List, Optional
@@ -56,6 +62,8 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="comma-separated rule ids to run (default: all)")
     ap.add_argument("--list-rules", action="store_true",
                     help="print the rule catalog and exit")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as JSON lines (machine-readable)")
     ap.add_argument("-q", "--quiet", action="store_true",
                     help="suppress the per-known-finding lines")
     args = ap.parse_args(argv)
@@ -88,6 +96,15 @@ def main(argv: Optional[List[str]] = None) -> int:
               f"-> {baseline_path}")
         return 0
 
+    if args.json:
+        for status, batch in (("new", new), ("baselined", known)):
+            for f in batch:
+                print(json.dumps({
+                    "rule": f.rule, "path": f.path, "line": f.line,
+                    "symbol": f.symbol, "message": f.message,
+                    "key": f.key, "status": status,
+                }, sort_keys=True))
+        return 1 if new else 0
     for f in new:
         print(f.render())
     if known and not args.quiet:

@@ -79,6 +79,7 @@ def _load_checkers() -> None:
     from repro.analysis import checks_kernels  # noqa: F401
     from repro.analysis import checks_locks  # noqa: F401
     from repro.analysis import checks_metrics  # noqa: F401
+    from repro.analysis import checks_races  # noqa: F401
     from repro.analysis import checks_spans  # noqa: F401
     from repro.analysis import checks_threads  # noqa: F401
 

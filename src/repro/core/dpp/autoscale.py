@@ -95,6 +95,11 @@ class ElasticController:
     ``Decision``s.  Stateful (tick counters + current prefetch depth) but
     side-effect free — actuation belongs to the session monitor."""
 
+    # single-threaded by contract: only the session monitor thread calls
+    # observe(); other threads at most read `depth` (GIL-atomic int), so
+    # none of this state takes a lock (REPRO-R001 / racedep allowlist)
+    _unshared = ("depth", "_pressure_ticks", "_idle_ticks", "_cooldown")
+
     def __init__(self, policy: Optional[ElasticPolicy] = None,
                  prefetch_depth: int = 4):
         self.policy = policy or ElasticPolicy()

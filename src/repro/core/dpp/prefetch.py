@@ -39,6 +39,12 @@ class PrefetchMetrics:
 class PrefetchPlanner:
     """Background cache warmer for a session's upcoming splits."""
 
+    # deliberately lock-free (REPRO-R001 / racedep allowlist): `depth` is
+    # a GIL-atomic int the monitor thread retunes while the planner loop
+    # reads it per iteration (a stale read costs one tick of lag, never
+    # correctness); `_thread` is written once by the launching thread
+    _unshared = ("depth", "_thread")
+
     def __init__(
         self,
         table: Table,

@@ -32,6 +32,12 @@ from repro.obs import NULL_TRACER, MetricsRegistry, merge_metrics
 
 
 class DPPSession:
+    # deliberately lock-free (REPRO-R001 / racedep allowlist): `_wid` is
+    # only bumped by _launch_worker, which runs in __init__ and then only
+    # ever on the single monitor thread; `_monitor` is written once by
+    # the thread calling start()
+    _unshared = ("_wid", "_monitor")
+
     def __init__(
         self,
         spec: SessionSpec,

@@ -108,6 +108,14 @@ class WorkerMetrics:
 class DPPWorker:
     """Stateless worker: pulls splits, produces tensor batches into a buffer."""
 
+    # deliberately lock-free (REPRO-R001 / racedep allowlist): `alive`
+    # and `retired` are GIL-atomic monotone booleans — `alive` is
+    # written only by the worker loop on exit, `retired` only by the
+    # session monitor on scale-down, and readers tolerate staleness by
+    # design (a late read means one extra poll, never lost data);
+    # `_thread` is written once by the launching thread in start()
+    _unshared = ("alive", "retired", "_thread")
+
     def __init__(
         self,
         worker_id: str,

@@ -260,21 +260,26 @@ class TectonicFS:
         capacity shares and accounting."""
         with self._mutate_lock:
             # atomic snapshot vs append/rewrite: bytes, placement, and the
-            # path's dedup generation all belong to one file version
+            # path's dedup generation all belong to one file version —
+            # and vs attach_cache/attach_tracer: `cache`/`tracer` are
+            # published under this lock, so testing `cache` again
+            # outside it would be double-checked locking (REPRO-R002)
             data = self._files[path]
             refs = self._blocks[path]
+            cache = self.cache
+            tracer = self.tracer
             gen0 = (
-                self.cache.dedup.generation(path)
-                if self.cache is not None else 0
+                cache.dedup.generation(path)
+                if cache is not None else 0
             )
         out: List[bytes] = []
         storage_b = dram_b = flash_b = 0
         for off, length in extents:
             assert off + length <= len(data), (off, length, len(data))
-            if self.cache is None:
+            if cache is None:
                 block_idx = off // BLOCK_BYTES
                 node = self.nodes[refs[min(block_idx, len(refs) - 1)].node_ids[0]]
-                with self.tracer.span(
+                with tracer.span(
                     "storage.read", tenant=tenant or "", path=path,
                     bytes=length,
                 ):
@@ -299,7 +304,7 @@ class TectonicFS:
                 node = self.nodes[refs[min(block_idx, len(refs) - 1)].node_ids[0]]
                 # cache.fill: the storage I/O behind a merged miss run —
                 # the fill cost the cache tier pays on behalf of this read
-                with self.tracer.span(
+                with tracer.span(
                     "cache.fill", tenant=tenant or "", path=path,
                     bytes=pending_len,
                 ):
@@ -310,42 +315,42 @@ class TectonicFS:
                 storage_b += pending_len
                 pending_len = 0
 
-            for seg_off, seg_len in self.cache.dedup.segments(path, off, length):
-                key = self.cache.resolve(path, seg_off, seg_len)
+            for seg_off, seg_len in cache.dedup.segments(path, off, length):
+                key = cache.resolve(path, seg_off, seg_len)
                 # single-flight get: concurrent sessions missing the same
                 # stripe wait for one fill instead of re-reading storage
-                hit = self.cache.get_or_claim(key, tenant=tenant)
+                hit = cache.get_or_claim(key, tenant=tenant)
                 if hit is not None:
                     _flush_storage()
                     if hit.tier == "dram":
                         dram_b += seg_len
                     else:
                         flash_b += seg_len
-                    if self.tracer.enabled:
-                        self.tracer.instant(
+                    if tracer.enabled:
+                        tracer.instant(
                             "cache.hit", tenant=tenant or "", tier=hit.tier,
                             bytes=seg_len,
                         )
                     parts.append(hit.payload)
                     continue
-                if self.tracer.enabled:
-                    self.tracer.instant(
+                if tracer.enabled:
+                    tracer.instant(
                         "cache.miss", tenant=tenant or "", bytes=seg_len,
                     )
                 try:
                     blob = data[seg_off: seg_off + seg_len]
                 except BaseException:
-                    self.cache.abort(key)
+                    cache.abort(key)
                     raise
-                if self.cache.dedup.generation(path) != gen0:
+                if cache.dedup.generation(path) != gen0:
                     # a rewrite landed after our snapshot: ``key`` now
                     # describes the NEW file version while ``blob`` holds
                     # the old bytes — admitting would poison post-rewrite
                     # readers.  Serve our (consistent, pre-rewrite) bytes
                     # but leave the cache alone.
-                    self.cache.abort(key)
+                    cache.abort(key)
                 else:
-                    self.cache.admit(key, blob, tenant=tenant)  # releases claim
+                    cache.admit(key, blob, tenant=tenant)  # releases claim
                 parts.append(blob)
                 if pending_len == 0:
                     pending_off = seg_off

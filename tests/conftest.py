@@ -23,6 +23,16 @@ _REPRO_LOCK_FILES = (
 )
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "lockdep: run the test under the lock-order sanitizer "
+        "(module-wide via `pytestmark = pytest.mark.lockdep`)")
+    config.addinivalue_line(
+        "markers",
+        "raced: run the test under the lockset race detector")
+
+
 @pytest.fixture
 def lockdep():
     """Opt-in lock-order sanitizer: every Lock/RLock a repro module builds
@@ -34,4 +44,40 @@ def lockdep():
         name_filter=lambda s: s.startswith(_REPRO_LOCK_FILES)
     ) as graph:
         yield graph
+    graph.assert_no_cycles()
+
+
+@pytest.fixture(autouse=True)
+def _lockdep_marked(request):
+    """Applies lockdep to every test carrying the `lockdep` marker (the
+    whole of test_dpp.py / test_cache.py via module-level pytestmark)
+    without double-patching tests that request the fixture explicitly."""
+    if (request.node.get_closest_marker("lockdep") is None
+            or "lockdep" in request.fixturenames):
+        yield
+        return
+    from repro.analysis import lockdep as ld
+
+    with ld.patched(
+        name_filter=lambda s: s.startswith(_REPRO_LOCK_FILES)
+    ) as graph:
+        yield
+    graph.assert_no_cycles()
+
+
+@pytest.fixture
+def raced():
+    """Opt-in lockset race detector (sibling of `lockdep`): attribute
+    accesses on the core threaded classes are tracked against the locks
+    held at each access; teardown fails the test on any attribute shared
+    across threads whose lockset intersection is empty."""
+    from repro.analysis import lockdep as ld
+    from repro.analysis import racedep as rd
+
+    with ld.patched(
+        name_filter=lambda s: s.startswith(_REPRO_LOCK_FILES)
+    ) as graph:
+        with rd.instrument(graph) as det:
+            yield det
+    det.assert_no_races()
     graph.assert_no_cycles()

@@ -634,7 +634,7 @@ def test_cli_list_rules(capsys):
     out = capsys.readouterr().out
     for rid in all_rules():
         assert rid in out
-    assert len(all_rules()) == 11
+    assert len(all_rules()) == 13
 
 
 def test_rule_catalog_is_stable():
@@ -643,6 +643,150 @@ def test_rule_catalog_is_stable():
         "REPRO-K001", "REPRO-K002",
         "REPRO-L001", "REPRO-L002", "REPRO-L003",
         "REPRO-M001", "REPRO-M002",
+        "REPRO-R001", "REPRO-R002",
         "REPRO-S001",
         "REPRO-T001", "REPRO-T002",
     ]
+
+
+# -- REPRO-R001: unlocked assignment on a race-instrumented class ------------
+
+RACED_WORKER_HEADER = """\
+    import threading
+
+    class DPPWorker:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.alive = True
+"""
+
+
+def test_r001_unlocked_assign_on_instrumented_class(tmp_path):
+    repo = _repo(tmp_path, {"src/repro/core/dpp/worker.py":
+                            RACED_WORKER_HEADER + """\
+
+        def _run(self):
+            self.alive = False
+    """})
+    f = _findings(repo, "REPRO-R001")
+    assert len(f) == 1 and f[0].symbol == "DPPWorker._run"
+    assert "_unshared" in f[0].message
+
+
+def test_r001_lockless_instrumented_class_flagged(tmp_path):
+    repo = _repo(tmp_path, {"src/repro/core/dpp/prefetch.py": """\
+        class PrefetchPlanner:
+            def __init__(self):
+                self.depth = 4
+
+            def set_depth(self, d):
+                self.depth = d
+    """})
+    f = _findings(repo, "REPRO-R001")
+    assert len(f) == 1 and f[0].symbol == "PrefetchPlanner.set_depth"
+
+
+def test_r001_negative_unshared_declaration(tmp_path):
+    repo = _repo(tmp_path, {"src/repro/core/dpp/prefetch.py": """\
+        class PrefetchPlanner:
+            _unshared = ("depth",)
+
+            def __init__(self):
+                self.depth = 4
+
+            def set_depth(self, d):
+                self.depth = d
+    """})
+    assert _findings(repo, "REPRO-R001") == []
+
+
+def test_r001_negative_assign_under_lock_or_elsewhere(tmp_path):
+    # locked assignment is fine; so is the same shape on a class that is
+    # not in the instrumented set (plain module path)
+    repo = _repo(tmp_path, {
+        "src/repro/core/dpp/worker.py": RACED_WORKER_HEADER + """\
+
+        def _run(self):
+            with self._lock:
+                self.alive = False
+    """,
+        "src/repro/other.py": """\
+        class Uninstrumented:
+            def __init__(self):
+                self.alive = True
+
+            def _run(self):
+                self.alive = False
+    """})
+    assert _findings(repo, "REPRO-R001") == []
+
+
+# -- REPRO-R002: double-checked locking --------------------------------------
+
+
+def test_r002_unlocked_test_of_published_attr(tmp_path):
+    repo = _repo(tmp_path, {"src/repro/fs.py": """\
+        import threading
+
+        class FS:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.cache = None
+
+            def attach(self, c):
+                with self._lock:
+                    self.cache = c
+
+            def read(self):
+                if self.cache is None:
+                    return 0
+                return 1
+    """})
+    f = _findings(repo, "REPRO-R002")
+    assert len(f) == 1 and f[0].symbol == "FS.read"
+    assert "self.cache" in f[0].message
+
+
+def test_r002_chained_attr_test_flagged(tmp_path):
+    repo = _repo(tmp_path, {"src/repro/fs.py": """\
+        import threading
+
+        class FS:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.tracer = None
+
+            def attach(self, t):
+                with self._lock:
+                    self.tracer = t
+
+            def read(self):
+                if self.tracer.enabled:
+                    return 1
+                return 0
+    """})
+    f = _findings(repo, "REPRO-R002")
+    assert len(f) == 1 and "self.tracer" in f[0].message
+
+
+def test_r002_negative_snapshot_into_local(tmp_path):
+    repo = _repo(tmp_path, {"src/repro/fs.py": """\
+        import threading
+
+        class FS:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.cache = None
+
+            def attach(self, c):
+                with self._lock:
+                    self.cache = c
+
+            def read(self):
+                with self._lock:
+                    cache = self.cache
+                if cache is None:
+                    return 0
+                return 1
+    """})
+    assert _findings(repo, "REPRO-R002") == []

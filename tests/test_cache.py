@@ -28,6 +28,10 @@ from repro.core.warehouse import Warehouse
 ROWS = 512
 STRIPE = 128
 
+# whole-module lock-order sanitizer coverage (ISSUE 8): every cache test
+# runs under lockdep via the marker-driven autouse fixture in conftest
+pytestmark = pytest.mark.lockdep
+
 
 def _warehouse(n_partitions=2, name="ct", seed=3):
     s = make_schema(name, 16, 6, seed=seed)

@@ -10,6 +10,10 @@ from repro.core.schema import make_schema
 from repro.core.transforms import default_dlrm_pipeline
 from repro.core.warehouse import Warehouse
 
+# whole-module lock-order sanitizer coverage (ISSUE 8): every DPP test
+# runs under lockdep via the marker-driven autouse fixture in conftest
+pytestmark = pytest.mark.lockdep
+
 
 def _table(n_partitions=2, rows=1024):
     s = make_schema("dpt", 20, 6, seed=0)
