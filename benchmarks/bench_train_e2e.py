@@ -1,0 +1,182 @@
+"""Closed training loop: DPP output -> tiered-embedding Trainer -> DLRM.
+
+The ISSUE-9 gate, two assertions on a live run:
+
+  (a) **frequency-aware tiering pays** — under the warehouse's Zipf id
+      traffic the tiered store's device hot-rate must be at least the
+      *pinned bound*: the hit rate a same-capacity static placement
+      (rows ``0..H-1`` pinned up front, no adaptation) achieves on the
+      exact same traffic.  Admission-by-popularity has to beat blind
+      pinning or the whole tier is dead weight.
+  (b) **the Table-7 row closes** — the traced run's artifact passes the
+      report ``check`` gate and its stall attribution (data stall /
+      embedding fetch / compute, summing to 100) is emitted into
+      ``BENCH_quick.json`` via ``emit_report``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, emit_report
+from repro.core import dwrf
+from repro.core.datagen import DataGenConfig
+from repro.core.dpp import DPPService, SessionSpec
+from repro.core.schema import make_schema
+from repro.core.tectonic import TectonicFS
+from repro.core.transforms import default_dlrm_pipeline
+from repro.core.warehouse import Warehouse
+from repro.models.dlrm import DLRMConfig
+from repro.obs import Tracer
+from repro.obs.report import build_report, check
+from repro.optim import OptimizerConfig
+from repro.train import Trainer, TrainerConfig, make_store_for_model
+
+HOT_ROWS = 64          # device-tier capacity per table (of 500-row vocab)
+EPOCHS = 8             # live epoch + replays: enough traffic to converge
+
+
+def _cfg() -> DLRMConfig:
+    return DLRMConfig(
+        num_dense=6, num_tables=3, vocab_per_table=500, embed_dim=8,
+        max_ids_per_feature=8, bottom_mlp=(16, 8), top_mlp=(32, 1),
+    )
+
+
+def _session(rows: int, tracer):
+    cfg = _cfg()
+    wh = Warehouse(TectonicFS(io_latency_scale=0.5))
+    schema = make_schema("bench_train_e2e", 8, 6, seed=0)
+    table = wh.create_table(schema)
+    table.generate(
+        2, DataGenConfig(rows_per_partition=rows, seed=1),
+        dwrf.DwrfWriterOptions(flattened=True, stripe_rows=256),
+    )
+    dense = schema.dense_ids[: cfg.num_dense]
+    sparse = schema.sparse_ids[: cfg.num_tables]
+    pipe = default_dlrm_pipeline(
+        dense, sparse, hash_size=cfg.vocab_per_table,
+        firstx=cfg.max_ids_per_feature,
+    )
+    spec = SessionSpec(
+        table=schema.name, partitions=(0, 1),
+        feature_ids=tuple(pipe.required_features()),
+        transform_specs=tuple(pipe.specs),
+        batch_size=128, rows_per_split=256,
+        dense_keys=tuple(f"d{f}" for f in dense),
+        sparse_keys=tuple(f"s{f}" for f in sparse),
+        max_ids_per_feature=cfg.max_ids_per_feature,
+    )
+    svc = DPPService(wh, tracer=tracer)
+    return cfg, svc, svc.create_session("train", spec, n_workers=2)
+
+
+def _batches(sess, recorded: list, epochs: int):
+    """Live epoch off the DPP client, then replay (steady-state traffic)."""
+    while True:
+        b = sess.clients[0].get_batch(timeout=5.0)
+        if b is None:
+            if sess.master.finished and all(
+                w.buffered == 0 for w in sess.workers
+            ):
+                break
+            continue
+        recorded.append(b)
+        yield b
+    for _ in range(epochs - 1):
+        for b in recorded:
+            yield b
+
+
+def _pinned_hot_rate(batches, hot_rows: int) -> float:
+    """Hit rate of the no-adaptation baseline: rows 0..H-1 pinned on
+    device before the run, measured over the same masked id traffic."""
+    hits = total = 0
+    for b in batches:
+        live = b["sparse_mask"] > 0.0
+        hits += int(((b["sparse_ids"] < hot_rows) & live).sum())
+        total += int(live.sum())
+    return hits / total if total else 0.0
+
+
+def run(quick: bool = False) -> None:
+    rows = 512 if quick else 2048
+    tracer = Tracer()
+    cfg, svc, sess = _session(rows, tracer)
+    store = make_store_for_model(
+        cfg, HOT_ROWS, seed=3, admit_reads=2, host_dram_rows=128
+    )
+    n_batches = 2 * rows // 128
+    steps = EPOCHS * n_batches
+    trainer = Trainer(
+        cfg,
+        OptimizerConfig(learning_rate=1e-2, warmup_steps=8, total_steps=steps),
+        TrainerConfig(
+            max_steps=steps, tenant="train",
+            trace_stall=False,          # the DPP client records client.stall
+            kernel_bags=True,           # fully-hot bags via the Pallas kernel
+        ),
+        embedding_store=store,
+        tracer=tracer,
+    )
+    recorded: list = []
+    sess.start()
+    t0 = time.perf_counter()
+    try:
+        trainer.fit(_batches(sess, recorded, EPOCHS))
+    finally:
+        sess.stop()
+    wall_s = time.perf_counter() - t0
+    assert len(recorded) == n_batches, (
+        f"DPP delivered {len(recorded)} batches, expected {n_batches}"
+    )
+    losses = [m.loss for m in trainer.history]
+    assert losses[-1] < losses[0], "training loop did not reduce the loss"
+
+    # (a) the frequency-aware tier must beat same-capacity static pinning
+    tiered = store.stats.hot_rate
+    pinned = _pinned_hot_rate(recorded, HOT_ROWS)
+    assert tiered >= pinned, (
+        f"tiered hot-rate {tiered:.3f} below the pinned bound {pinned:.3f}"
+    )
+    emit(
+        "train_e2e.hot_rate", wall_s * 1e6 / max(len(trainer.history), 1),
+        f"tiered={tiered:.3f} pinned={pinned:.3f} "
+        f"kernel_bags={store.stats.kernel_bags}",
+    )
+
+    # (b) Table-7 row: artifact passes the report gate; shares close at 100
+    fd, path = tempfile.mkstemp(prefix="train_e2e_", suffix=".json")
+    os.close(fd)
+    try:
+        metrics = {
+            "tenants": {
+                "train": {
+                    **sess.registry.snapshot().values,
+                    **trainer.registry.snapshot().values,
+                },
+            },
+            "cache": svc.tenant_summary(),
+        }
+        tracer.write(path, metrics=metrics)
+        with open(path, "r", encoding="utf-8") as f:
+            doc = json.load(f)
+    finally:
+        os.unlink(path)
+    errs = check(doc)
+    assert errs == [], f"trace artifact failed report checks: {errs}"
+    report = build_report(doc)
+    row = report["train"]
+    data_pct = 100.0 - row["compute_pct"] - row["embed_fetch_pct"]
+    assert row["embed_fetch_pct"] > 0.0, "no embed.fetch share attributed"
+    emit_report("train_e2e.table7", report)
+    emit(
+        "train_e2e.step_breakdown", row["wall_us"],
+        f"data_pct={data_pct:.2f} embed_pct={row['embed_fetch_pct']:.2f} "
+        f"compute_pct={row['compute_pct']:.2f} "
+        f"loss0={losses[0]:.4f} lossN={losses[-1]:.4f}",
+    )

@@ -32,6 +32,7 @@ SECTIONS = [
     "popularity",       # Fig 7
     "dpp",              # Table 9 / Fig 9 / Table 10
     "trainer",          # Table 8 / Fig 8 / Table 7
+    "train_e2e",        # closed loop: DPP -> tiered embeddings -> DLRM (ISSUE 9)
     "optimizations",    # Table 12
     "kernels",          # §7.2 fused transform + hot kernels
     "engine",           # §7.2 fused TransformEngine vs per-feature (ISSUE 5)

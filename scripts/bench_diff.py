@@ -8,8 +8,14 @@ A metric row regresses when its ``us_per_call`` grew by more than
 noisy; tighten per-invocation for quiet machines).  A section regresses
 when its status flips from ``ok`` to a failure.  Rows that appear or
 vanish between the two artifacts are reported informationally — renames
-are a review concern, not an automatic failure.  Exits 1 iff at least
-one regression was found, so CI can gate on trend directly:
+are a review concern, not an automatic failure.
+
+A few rows also carry *derived* ``key=value`` metrics that are quality
+signals rather than timings; those are guarded absolutely (points, not
+ratios — a hot-rate of 0.76 dropping to 0.60 is a policy regression no
+matter how fast it ran).  ``_DERIVED_GUARDS`` lists each guarded key
+with its direction and tolerance.  Exits 1 iff at least one regression
+was found, so CI can gate on trend directly:
 
   python -m benchmarks.run --quick        # writes BENCH_quick.json
   python scripts/bench_diff.py baseline.json BENCH_quick.json
@@ -22,12 +28,43 @@ import sys
 from typing import Dict, List, Optional, Tuple
 
 
+# (metric-name, derived-key) -> (direction, tolerance in absolute points).
+# "floor": the value must not drop more than `tol` below the baseline
+# (hit rates, fractions-of-good); "ceil": it must not rise more than
+# `tol` above it (stall shares, fractions-of-bad).
+_DERIVED_GUARDS: Dict[Tuple[str, str], Tuple[str, float]] = {
+    ("train_e2e.hot_rate", "tiered"): ("floor", 0.05),
+    ("train_e2e.step_breakdown", "data_pct"): ("ceil", 10.0),
+    ("train_e2e.step_breakdown", "embed_pct"): ("ceil", 10.0),
+}
+
+
 def _rows(report: Dict) -> Dict[Tuple[str, str], float]:
     """(section, metric-name) -> us_per_call."""
     out: Dict[Tuple[str, str], float] = {}
     for section, body in report.get("sections", {}).items():
         for row in body.get("metrics", []):
             out[(section, row["name"])] = float(row["us_per_call"])
+    return out
+
+
+def _derived(report: Dict) -> Dict[str, Dict[str, float]]:
+    """metric-name -> parsed ``key=value`` floats from the derived column
+    (non-numeric values are skipped)."""
+    out: Dict[str, Dict[str, float]] = {}
+    for body in report.get("sections", {}).values():
+        for row in body.get("metrics", []):
+            vals: Dict[str, float] = {}
+            for tok in str(row.get("derived", "")).split():
+                key, _, raw = tok.partition("=")
+                if not _:
+                    continue
+                try:
+                    vals[key] = float(raw)
+                except ValueError:
+                    continue
+            if vals:
+                out[row["name"]] = vals
     return out
 
 
@@ -71,6 +108,17 @@ def compare(old: Dict, new: Dict, threshold: float) -> Tuple[List[str], List[str
             notes.append(line + "  (improved)")
     for key in sorted(set(old_rows) - set(new_rows)):
         notes.append(f"row {key[1]} [{key[0]}]: removed")
+    old_derived, new_derived = _derived(old), _derived(new)
+    for (name, dkey), (direction, tol) in sorted(_DERIVED_GUARDS.items()):
+        ov = old_derived.get(name, {}).get(dkey)
+        nv = new_derived.get(name, {}).get(dkey)
+        if ov is None or nv is None:
+            continue                     # row absent on one side: a note above
+        line = f"derived {name}:{dkey}: {ov:.3f} -> {nv:.3f}"
+        if direction == "floor" and nv < ov - tol:
+            regressions.append(f"{line} (dropped > {tol:g})")
+        elif direction == "ceil" and nv > ov + tol:
+            regressions.append(f"{line} (rose > {tol:g})")
     return regressions, notes
 
 

@@ -17,6 +17,12 @@ inside its net.  Two structural guarantees:
     (``Clamp``) — the engine selects the ``_F`` lane from operand dtype,
     so a float-typed ``Clamp`` differential exercises it.
 
+    K002 also covers the public kernel API: every public function the
+    dispatch layer ``src/repro/kernels/ops.py`` defines (``embedding_bag``,
+    ``flash_attention``, ...) must be named by the differential suite in
+    ``tests/test_kernels.py`` — a dispatchable kernel nobody
+    parity-tests is exactly the untested-op hole, one layer up.
+
 A new op can therefore never land without a ref implementation and a
 differential test naming it.
 """
@@ -38,6 +44,8 @@ K002 = rule("REPRO-K002",
 FUSED = "src/repro/kernels/fused_transform.py"
 REF = "src/repro/kernels/ref.py"
 SUITE = "tests/test_engine.py"
+OPS = "src/repro/kernels/ops.py"
+KSUITE = "tests/test_kernels.py"
 
 
 def _op_defs(mod) -> Dict[str, Optional[int]]:
@@ -117,4 +125,41 @@ def check_kernel_parity(ctx: CheckContext):
             f"{name} is never exercised by {SUITE} (neither the constant "
             f"nor a {transform_name(name)!r} spec appears)",
         ))
+    findings.extend(_check_ops_coverage(ctx))
     return findings
+
+
+def _public_kernel_defs(mod) -> Dict[str, int]:
+    """Top-level public ``def``s in the dispatch module -> {name: line}."""
+    return {
+        node.name: node.lineno
+        for node in mod.tree.body
+        if isinstance(node, ast.FunctionDef) and not node.name.startswith("_")
+    }
+
+
+def _check_ops_coverage(ctx: CheckContext) -> List[Finding]:
+    """K002, dispatch layer: every public kernel in ``kernels/ops.py`` must
+    be named by the differential suite in ``tests/test_kernels.py``."""
+    ops = ctx.load(OPS)
+    if ops is None:
+        return []
+    kernels = _public_kernel_defs(ops)
+    if not kernels:
+        return []
+    ksuite = ctx.load(KSUITE)
+    if ksuite is None:
+        return [Finding(
+            K002, KSUITE, 1,
+            "kernel differential suite missing — no dispatchable kernel "
+            "is parity-tested",
+        )]
+    return [
+        Finding(
+            K002, OPS, line,
+            f"public kernel {name!r} is never exercised by {KSUITE} — a "
+            "dispatchable op without a differential test",
+        )
+        for name, line in sorted(kernels.items())
+        if name not in ksuite.text
+    ]

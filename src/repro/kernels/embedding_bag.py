@@ -17,7 +17,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(ids_ref, mask_ref, table_row_ref, out_ref, denom_ref):
+def _kernel(ids_ref, mask_ref, table_row_ref, out_ref, denom_ref, *, mean: bool):
     l = pl.program_id(1)
     n_l = pl.num_programs(1)
 
@@ -30,20 +30,25 @@ def _kernel(ids_ref, mask_ref, table_row_ref, out_ref, denom_ref):
     out_ref[...] += table_row_ref[...] * m
     denom_ref[...] += m
 
-    @pl.when(l == n_l - 1)
-    def _finish():
-        out_ref[...] = out_ref[...] / jnp.maximum(denom_ref[...], 1.0)
+    if mean:
+        @pl.when(l == n_l - 1)
+        def _finish():
+            out_ref[...] = out_ref[...] / jnp.maximum(denom_ref[...], 1.0)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
 def embedding_bag(
     table: jax.Array,     # (V, E) f32
     ids: jax.Array,       # (B, L) int32
     mask: jax.Array,      # (B, L) f32
     *,
+    mode: str = "mean",   # "mean" | "sum" (static: picks the finish pass)
     interpret: bool = False,
 ) -> jax.Array:
-    """Mean-pooled bag: out[b] = sum_l mask[b,l] * table[ids[b,l]] / sum(mask)."""
+    """Pooled bag: out[b] = sum_l mask[b,l] * table[ids[b,l]], divided by
+    max(sum(mask), 1) when ``mode="mean"`` (the DLRM pooling denominator)."""
+    if mode not in ("mean", "sum"):
+        raise ValueError(f"mode must be 'mean' or 'sum', got {mode!r}")
     v, e = table.shape
     b, l = ids.shape
 
@@ -60,7 +65,7 @@ def embedding_bag(
         ],
     )
     out, _ = pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, mean=(mode == "mean")),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((b, e), table.dtype),

@@ -51,11 +51,13 @@ def fused_transform(ids, op_codes, param0, param1, borders=None, *,
     return _fused_ref(ids, op_codes, param0, param1, borders)
 
 
-def embedding_bag(table, ids, mask, *, use_pallas: Optional[bool] = None):
+def embedding_bag(table, ids, mask, *, mode: str = "mean",
+                  use_pallas: Optional[bool] = None):
     use = _on_tpu() if use_pallas is None else use_pallas
     if use:
-        return _embag_pallas(table, ids, mask, interpret=not _on_tpu())
-    return ref.embedding_bag(table, ids, mask)
+        return _embag_pallas(table, ids, mask, mode=mode,
+                             interpret=not _on_tpu())
+    return ref.embedding_bag(table, ids, mask, mode=mode)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, use_pallas: Optional[bool] = None):

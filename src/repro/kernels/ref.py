@@ -158,10 +158,15 @@ def embedding_bag(
     table: jax.Array,       # (V, E) f32
     ids: jax.Array,         # (B, L) int32
     mask: jax.Array,        # (B, L) f32
+    mode: str = "mean",     # "mean" | "sum"
 ) -> jax.Array:
-    """Mean-pooled embedding bag -> (B, E)."""
+    """Pooled embedding bag -> (B, E); mean divides by max(sum(mask), 1)."""
+    if mode not in ("mean", "sum"):
+        raise ValueError(f"mode must be 'mean' or 'sum', got {mode!r}")
     emb = jnp.take(table, ids, axis=0)                  # (B, L, E)
     s = jnp.sum(emb * mask[..., None], axis=1)
+    if mode == "sum":
+        return s
     denom = jnp.maximum(jnp.sum(mask, axis=1), 1.0)
     return s / denom[:, None]
 

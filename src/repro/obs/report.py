@@ -7,8 +7,9 @@ plus an ``ALL`` aggregate:
 
   * the share of wall-clock the trainer spent blocked (``client.stall``)
     attributed across storage reads, cache fills, extract+transform and
-    load/materialize — the paper's Table 7 breakdown — plus the
-    non-blocked remainder as compute.  Shares sum to 100 by construction.
+    load/materialize — the paper's Table 7 breakdown — plus the directly
+    measured tiered-embedding fetch share (``embed.fetch``, ISSUE 9) and
+    the remainder as compute.  Shares sum to 100 by construction.
   * bytes by source tier (storage vs stripe-cache RX, DRAM/flash
     resident), the over-read factor (stripe rows decoded per fresh row
     served — Table 9's E-stage amplification) and the fused-kernel
@@ -36,9 +37,13 @@ _BUCKETS = {
     "load.materialize": "load",
 }
 _WEIGHTS = ("storage", "cache_fill", "transform", "load")
+# directly-measured (non-blocked) trainer-side categories: unlike the
+# _BUCKETS weights these are not a split of client.stall — they are their
+# own slice of the wall clock (tiered embedding lookups, ISSUE 9)
+_EMBED_SPAN = "embed.fetch"
 _SHARE_KEYS = (
     "storage_pct", "cache_fill_pct", "transform_pct", "load_pct",
-    "compute_pct", "unattributed_pct",
+    "embed_fetch_pct", "compute_pct", "unattributed_pct",
 )
 # registry-snapshot names the byte/efficiency columns read
 _SNAP_COLS = (
@@ -65,7 +70,11 @@ def _accumulate(evs: List[Dict[str, Any]]) -> Dict[str, float]:
         float(sum(e["dur"] for e in evs if e["name"] == "client.stall")),
         wall,
     )
-    row = {"wall_us": wall, "stall_us": stall}
+    embed = min(
+        float(sum(e["dur"] for e in evs if e["name"] == _EMBED_SPAN)),
+        wall - stall,
+    )
+    row = {"wall_us": wall, "stall_us": stall, "embed_us": embed}
     for b in _WEIGHTS:
         row[f"w_{b}_us"] = 0.0
     for e in evs:
@@ -85,7 +94,9 @@ def _shares(raw: Dict[str, float]) -> Dict[str, float]:
         out["compute_pct"] = 100.0
         return out
     stall_pct = 100.0 * raw["stall_us"] / wall
-    out["compute_pct"] = 100.0 - stall_pct
+    embed_pct = 100.0 * raw.get("embed_us", 0.0) / wall
+    out["embed_fetch_pct"] = embed_pct
+    out["compute_pct"] = 100.0 - stall_pct - embed_pct
     wsum = sum(raw[f"w_{b}_us"] for b in _WEIGHTS)
     if wsum > 0.0:
         for b in _WEIGHTS:
@@ -196,7 +207,8 @@ def check(doc: Dict[str, Any]) -> List[str]:
 def _fmt_table(rows: Dict[str, Dict[str, float]]) -> str:
     head = (
         f"{'tenant':<12} {'wall_s':>8} {'storage%':>9} {'cachefill%':>10} "
-        f"{'transform%':>10} {'load%':>7} {'compute%':>9} {'unattr%':>8}"
+        f"{'transform%':>10} {'load%':>7} {'embed%':>7} {'compute%':>9} "
+        f"{'unattr%':>8}"
     )
     lines = [head, "-" * len(head)]
     for tenant, r in rows.items():
@@ -204,6 +216,7 @@ def _fmt_table(rows: Dict[str, Dict[str, float]]) -> str:
             f"{tenant or '(none)':<12} {r['wall_us'] / 1e6:>8.2f} "
             f"{r['storage_pct']:>9.2f} {r['cache_fill_pct']:>10.2f} "
             f"{r['transform_pct']:>10.2f} {r['load_pct']:>7.2f} "
+            f"{r['embed_fetch_pct']:>7.2f} "
             f"{r['compute_pct']:>9.2f} {r['unattributed_pct']:>8.2f}"
         )
     head2 = (

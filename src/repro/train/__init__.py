@@ -1,1 +1,6 @@
-from repro.train.trainer import Trainer, TrainerConfig
+from repro.train.embedding_cache import (
+    EmbedCacheStats,
+    TieredEmbeddingStore,
+    make_store_for_model,
+)
+from repro.train.trainer import StepMetrics, Trainer, TrainerConfig, TrainMetrics

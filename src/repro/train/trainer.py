@@ -5,6 +5,15 @@ The loop every trainer runs:
   state = train_step(state, batch) (jitted, sharded)
   periodic checkpoint (atomic, resumable)
 
+With an attached :class:`~repro.train.embedding_cache.TieredEmbeddingStore`
+the DLRM sparse path runs instead: embedding bags are served from the
+hot/cold tier (``embed.fetch`` span), the jitted step trains only the MLPs
+by autodiff and returns d(pooled), and the store applies the row-wise
+AdaGrad scatter to the host tier — the MTrainS-style heterogeneous-memory
+training loop.  Every step feeds ``StepMetrics`` into a ``MetricsRegistry``
+(``train.*`` + ``embed.*``) so ``repro.obs.report`` can attribute step time
+across data stall, embedding fetch, and compute.
+
 Fault tolerance: resume from the newest complete checkpoint (trainer
 crash), DPP master checkpoint/restore + stateless worker restart (data
 plane), and ``remesh`` for elastic scaling — re-lower the step on a new
@@ -25,9 +34,9 @@ from repro.checkpoint import CheckpointManager
 from repro.distributed.context import sharding_context
 from repro.distributed.sharding import TRAIN_RULES
 from repro.models import build_model
-from repro.models.common import partition_specs
-from repro.obs import NULL_TRACER, gauge
-from repro.optim import OptimizerConfig, adamw_init, adamw_update
+from repro.models.common import init_params, partition_specs
+from repro.obs import NULL_TRACER, MetricsRegistry, counter, gauge
+from repro.optim import OptimizerConfig, adamw_init, adamw_update, wsd_schedule
 
 
 @dataclasses.dataclass
@@ -37,6 +46,9 @@ class TrainerConfig:
     log_every: int = 10
     max_steps: int = 200
     batch_timeout_s: float = 30.0
+    tenant: str = ""            # tenant label on trainer spans (Table-7 rows)
+    trace_stall: bool = True    # off when the batch source traces client.stall
+    kernel_bags: bool = False   # serve fully-hot bags via the Pallas kernel
 
 
 @dataclasses.dataclass
@@ -49,6 +61,21 @@ class StepMetrics:
     grad_norm: float = gauge(0.0, merge="last")
     step_time_s: float = gauge(0.0, merge="last")
     stall_s: float = gauge(0.0, merge="last")
+    embed_fetch_s: float = gauge(0.0, merge="last")   # tiered-store lookup time
+    hot_rate: float = gauge(0.0, merge="last")        # cumulative device-tier hit rate
+
+
+@dataclasses.dataclass
+class TrainMetrics:
+    """Cumulative run totals the registry snapshots as ``train.*`` —
+    counters accumulate across steps, loss/grad_norm report the level."""
+
+    steps: int = counter()
+    loss: float = gauge(0.0, merge="last")
+    grad_norm: float = gauge(0.0, merge="last")
+    step_s: float = counter(0.0)
+    stall_s: float = counter(0.0)
+    embed_fetch_s: float = counter(0.0)
 
 
 class Trainer:
@@ -60,6 +87,8 @@ class Trainer:
         mesh: Optional[Any] = None,
         rules=TRAIN_RULES,
         tracer=NULL_TRACER,
+        embedding_store: Optional[Any] = None,
+        registry: Optional[MetricsRegistry] = None,
     ):
         self.tracer = tracer
         self.model_cfg = model_cfg
@@ -68,13 +97,25 @@ class Trainer:
         self.cfg = trainer_cfg or TrainerConfig()
         self.mesh = mesh
         self.rules = rules
+        self.store = embedding_store
+        self._sparse = (
+            embedding_store is not None
+            and hasattr(self.model, "loss_from_pooled")
+        )
         self.ckpt = (
             CheckpointManager(self.cfg.checkpoint_dir)
             if self.cfg.checkpoint_dir
             else None
         )
-        self._train_step = self._build_step()
+        self._train_step = (
+            self._build_sparse_step() if self._sparse else self._build_step()
+        )
         self.history: list[StepMetrics] = []
+        self.metrics = TrainMetrics()
+        self.registry = registry or MetricsRegistry()
+        self.registry.register("train", lambda: self.metrics)
+        if self.store is not None:
+            self.registry.register("embed", lambda: self.store.stats)
 
     # -- step ------------------------------------------------------------
 
@@ -94,7 +135,42 @@ class Trainer:
 
         return jax.jit(train_step, donate_argnums=(0, 1))
 
+    def _build_sparse_step(self) -> Callable:
+        """MLP-only jitted step for the tiered-embedding path: pooled bags
+        come in as data, d(pooled) goes back out for the store's row-wise
+        AdaGrad scatter (``DLRM.sparse_table_update`` semantics), along
+        with the schedule lr the scatter must use."""
+        model, opt_cfg = self.model, self.opt_cfg
+
+        def train_step(mlp_params, opt_state, pooled, batch):
+            def lf(mp, pl):
+                return model.loss_from_pooled(mp, pl, batch)
+
+            loss, (g_mlp, g_pooled) = jax.value_and_grad(
+                lf, argnums=(0, 1)
+            )(mlp_params, pooled)
+            new_p, new_o, gnorm = adamw_update(
+                mlp_params, g_mlp, opt_state, opt_cfg
+            )
+            lr = wsd_schedule(opt_cfg, new_o["step"])
+            return new_p, new_o, loss, gnorm, g_pooled, lr
+
+        return jax.jit(train_step, donate_argnums=(0, 1))
+
     def init_state(self, seed: int = 0) -> Dict[str, Any]:
+        if self._sparse:
+            # embedding tables live in the store's host tier; the jitted
+            # state carries only the dense/interaction MLPs
+            specs = {
+                k: v for k, v in self.model.param_specs().items()
+                if k != "tables"
+            }
+            params = init_params(specs, jax.random.PRNGKey(seed))
+            return {
+                "params": params,
+                "opt": adamw_init(params, self.opt_cfg),
+                "step": 0,
+            }
         params = self.model.init(jax.random.PRNGKey(seed))
         if self.mesh is not None:
             specs = partition_specs(self.model.param_specs(), self.rules, self.mesh)
@@ -117,9 +193,16 @@ class Trainer:
         """Elastic scaling: rebuild the jitted step for a new device mesh.
         Existing state is resharded lazily on the next device_put."""
         self.mesh = new_mesh
-        self._train_step = self._build_step()
+        self._train_step = (
+            self._build_sparse_step() if self._sparse else self._build_step()
+        )
 
     # -- loop -----------------------------------------------------------------
+
+    def _span_labels(self, step: int) -> Dict[str, Any]:
+        if self.cfg.tenant:
+            return {"step": step, "tenant": self.cfg.tenant}
+        return {"step": step}
 
     def fit(
         self,
@@ -140,20 +223,56 @@ class Trainer:
             if batch is None:
                 continue
             t1 = time.perf_counter()
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            params, opt, loss, gnorm = self._train_step(params, opt, batch)
+            if self._sparse:
+                ids = np.asarray(batch["sparse_ids"])
+                smask = np.asarray(batch["sparse_mask"], np.float32)
+                pooled = self.store.pooled(
+                    ids, smask, use_kernel=self.cfg.kernel_bags
+                )
+                te = time.perf_counter()
+                jb = {
+                    "dense": jnp.asarray(batch["dense"]),
+                    "label": jnp.asarray(batch["label"]),
+                }
+                params, opt, loss, gnorm, dpooled, lr = self._train_step(
+                    params, opt, jnp.asarray(pooled), jb
+                )
+                self.store.apply_sparse_update(
+                    np.asarray(dpooled), ids, smask, lr=float(lr)
+                )
+            else:
+                te = t1
+                jb = {k: jnp.asarray(v) for k, v in batch.items()}
+                params, opt, loss, gnorm = self._train_step(params, opt, jb)
             step += 1
             t2 = time.perf_counter()
             if self.tracer.enabled:
-                if t1 > t0:
+                if self.cfg.trace_stall and t1 > t0:
                     # batch-fetch wait: trainer-side stall (Table 7)
-                    self.tracer.record("client.stall", t0, t1, step=step)
-                self.tracer.record("train.step", t1, t2, step=step)
+                    self.tracer.record(
+                        "client.stall", t0, t1, **self._span_labels(step)
+                    )
+                if te > t1:
+                    # tiered-embedding lookup: the embed-fetch share
+                    self.tracer.record(
+                        "embed.fetch", t1, te, **self._span_labels(step)
+                    )
+                self.tracer.record(
+                    "train.step", te, t2, **self._span_labels(step)
+                )
             m = StepMetrics(
                 step=step, loss=float(loss), grad_norm=float(gnorm),
-                step_time_s=t2 - t1, stall_s=t1 - t0,
+                step_time_s=t2 - te, stall_s=t1 - t0,
+                embed_fetch_s=te - t1,
+                hot_rate=self.store.stats.hot_rate if self._sparse else 0.0,
             )
             self.history.append(m)
+            self.metrics.steps += 1
+            self.metrics.loss = m.loss
+            self.metrics.grad_norm = m.grad_norm
+            self.metrics.step_s += m.step_time_s
+            self.metrics.stall_s += m.stall_s
+            self.metrics.embed_fetch_s += m.embed_fetch_s
             if self.ckpt and step % self.cfg.checkpoint_every == 0:
                 self.ckpt.save(step, {"params": params, "opt": opt})
         if self.ckpt:
@@ -163,6 +282,15 @@ class Trainer:
     # -- reporting ----------------------------------------------------------------
 
     def stall_fraction(self) -> float:
-        tot = sum(m.step_time_s + m.stall_s for m in self.history)
+        tot = sum(
+            m.step_time_s + m.embed_fetch_s + m.stall_s for m in self.history
+        )
         stall = sum(m.stall_s for m in self.history)
         return stall / tot if tot else 0.0
+
+    def embed_fetch_fraction(self) -> float:
+        tot = sum(
+            m.step_time_s + m.embed_fetch_s + m.stall_s for m in self.history
+        )
+        emb = sum(m.embed_fetch_s for m in self.history)
+        return emb / tot if tot else 0.0

@@ -20,6 +20,7 @@ _REPRO_LOCK_FILES = (
     "stripe_cache.py", "tectonic.py", "master.py", "worker.py",
     "service.py", "client.py", "prefetch.py", "tensor_cache.py",
     "dedup.py", "warehouse.py", "autoscale.py", "engine.py", "trainer.py",
+    "embedding_cache.py",
 )
 
 

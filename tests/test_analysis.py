@@ -297,6 +297,57 @@ def test_k002_negative_transform_name_counts(tmp_path):
     assert _findings(repo, "REPRO-K002") == []
 
 
+def test_k002_dispatch_kernel_without_differential_test(tmp_path):
+    # a public kernel in ops.py absent from tests/test_kernels.py is the
+    # untested-op hole one layer up (ISSUE 9)
+    repo = _repo(tmp_path, {
+        "src/repro/kernels/fused_transform.py": "OP_FOO = 0\n",
+        "src/repro/kernels/ref.py": "OP_FOO = 0\n",
+        "tests/test_engine.py": "OP_FOO",
+        "src/repro/kernels/ops.py": """\
+            def embedding_bag(t, i, m):
+                return t
+
+            def _private_helper():
+                pass
+        """,
+        "tests/test_kernels.py": "def test_nothing():\n    pass\n",
+    })
+    f = _findings(repo, "REPRO-K002")
+    assert len(f) == 1 and "embedding_bag" in f[0].message \
+        and "test_kernels" in f[0].message
+
+
+def test_k002_dispatch_suite_missing_entirely(tmp_path):
+    repo = _repo(tmp_path, {
+        "src/repro/kernels/fused_transform.py": "OP_FOO = 0\n",
+        "src/repro/kernels/ref.py": "OP_FOO = 0\n",
+        "tests/test_engine.py": "OP_FOO",
+        "src/repro/kernels/ops.py": "def flash_attention(q, k, v):\n"
+                                    "    return q\n",
+    })
+    f = _findings(repo, "REPRO-K002")
+    assert len(f) == 1 and "differential suite missing" in f[0].message
+
+
+def test_k002_dispatch_negative_covered_and_ops_absent(tmp_path):
+    # every public kernel named by the suite -> clean; and a repo with no
+    # ops.py at all (the older fixtures) must stay clean too
+    repo = _repo(tmp_path, {
+        "src/repro/kernels/fused_transform.py": "OP_FOO = 0\n",
+        "src/repro/kernels/ref.py": "OP_FOO = 0\n",
+        "tests/test_engine.py": "OP_FOO",
+        "src/repro/kernels/ops.py": "def embedding_bag(t, i, m):\n"
+                                    "    return t\n",
+        "tests/test_kernels.py": "def test_bag():\n"
+                                 "    embedding_bag(1, 2, 3)\n",
+    })
+    assert _findings(repo, "REPRO-K002") == []
+    bare = _kernel_repo(tmp_path / "bare", "OP_FOO = 0\n", "OP_FOO = 0\n",
+                        "OP_FOO")
+    assert _findings(bare, "REPRO-K002") == []
+
+
 # -- REPRO-M001/M002: metrics contract ---------------------------------------
 
 WORKER_METRICS = """\

@@ -21,8 +21,9 @@ def _report(**sections) -> dict:
             name: {
                 "status": body.get("status", "ok"),
                 "metrics": [
-                    {"name": n, "us_per_call": us, "derived": ""}
-                    for n, us in body.get("metrics", [])
+                    {"name": row[0], "us_per_call": row[1],
+                     "derived": row[2] if len(row) > 2 else ""}
+                    for row in body.get("metrics", [])
                 ],
             }
             for name, body in sections.items()
@@ -88,6 +89,59 @@ def test_zero_baseline_rows_are_skipped(tmp_path):
     # flag-style rows emit 0.0 us; they must never divide-by-zero or flag
     old = _report(faults={"metrics": [("faults.stall_driven_scaleup", 0.0)]})
     new = _report(faults={"metrics": [("faults.stall_driven_scaleup", 9.9)]})
+    rc = bench_diff.main([_write(tmp_path, "old.json", old),
+                          _write(tmp_path, "new.json", new)])
+    assert rc == 0
+
+
+# -- derived-metric guards (ISSUE 9: hot-rate floor, stall-share ceiling) ---
+
+
+def _e2e_report(tiered: float, data_pct: float, embed_pct: float) -> dict:
+    return _report(train_e2e={"metrics": [
+        ("train_e2e.hot_rate", 100.0, f"tiered={tiered:.3f} pinned=0.200"),
+        ("train_e2e.step_breakdown", 100.0,
+         f"data_pct={data_pct:.2f} embed_pct={embed_pct:.2f} "
+         f"compute_pct={100 - data_pct - embed_pct:.2f}"),
+    ]})
+
+
+def test_hot_rate_drop_past_floor_is_regression(tmp_path, capsys):
+    old = _e2e_report(tiered=0.75, data_pct=60.0, embed_pct=14.0)
+    new = _e2e_report(tiered=0.60, data_pct=60.0, embed_pct=14.0)
+    rc = bench_diff.main([_write(tmp_path, "old.json", old),
+                          _write(tmp_path, "new.json", new)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "REGRESSION" in out and "hot_rate:tiered" in out
+
+
+def test_stall_share_rise_past_ceiling_is_regression(tmp_path, capsys):
+    old = _e2e_report(tiered=0.75, data_pct=60.0, embed_pct=14.0)
+    new = _e2e_report(tiered=0.75, data_pct=72.0, embed_pct=14.0)
+    rc = bench_diff.main([_write(tmp_path, "old.json", old),
+                          _write(tmp_path, "new.json", new)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "step_breakdown:data_pct" in out
+
+
+def test_derived_within_tolerance_passes(tmp_path):
+    # small wobble on every guarded key (and an improved hot rate) is fine
+    old = _e2e_report(tiered=0.75, data_pct=60.0, embed_pct=14.0)
+    new = _e2e_report(tiered=0.78, data_pct=64.0, embed_pct=16.0)
+    rc = bench_diff.main([_write(tmp_path, "old.json", old),
+                          _write(tmp_path, "new.json", new)])
+    assert rc == 0
+
+
+def test_derived_guard_skipped_when_row_absent(tmp_path):
+    # a baseline without the e2e section must not trip the guards
+    old = _report(dpp={"metrics": [("dpp.extract", 100.0)]})
+    new = _e2e_report(tiered=0.10, data_pct=90.0, embed_pct=5.0)
+    new["sections"]["dpp"] = _report(
+        dpp={"metrics": [("dpp.extract", 100.0)]}
+    )["sections"]["dpp"]
     rc = bench_diff.main([_write(tmp_path, "old.json", old),
                           _write(tmp_path, "new.json", new)])
     assert rc == 0

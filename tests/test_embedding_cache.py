@@ -1,0 +1,263 @@
+"""Unit + property tests for the frequency-aware tiered embedding store
+(ISSUE 9): admission/eviction policy, host DRAM/flash accounting,
+generation invalidation, kernel-path parity, and the two structural
+invariants — capacity is never exceeded and every lookup serves the
+latest-generation row.
+"""
+import numpy as np
+import pytest
+
+from repro.train import TieredEmbeddingStore
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _tables(t=2, v=40, e=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(0, 0.01, (t, v, e)).astype(np.float32)
+
+
+def _bag(row_ids, t=1, l=1):
+    """One batch of single-table bags: ids (B, t, l) + all-live mask."""
+    ids = np.asarray(row_ids, np.int64).reshape(-1, t, l)
+    return ids, np.ones(ids.shape, np.float32)
+
+
+def _flat_pool(host, ids, mask):
+    """The byte-identity oracle: mean-pool straight off the host tables
+    with the same formula the store uses."""
+    t = host.shape[0]
+    emb = np.stack(
+        [host[i][np.clip(ids[:, i], 0, host.shape[1] - 1)] for i in range(t)],
+        axis=1,
+    )
+    denom = np.maximum(mask.sum(axis=2), 1.0)
+    return (
+        (emb * mask[..., None]).sum(axis=2) / denom[..., None]
+    ).astype(np.float32)
+
+
+def test_flat_store_is_pure_host():
+    """hot capacity 0: every access is a host fetch, output == oracle."""
+    tabs = _tables()
+    store = TieredEmbeddingStore(tabs, 0)
+    rng = np.random.default_rng(1)
+    ids = rng.integers(0, 40, (8, 2, 5))
+    mask = (rng.random((8, 2, 5)) < 0.7).astype(np.float32)
+    got = store.pooled(ids, mask)
+    assert np.array_equal(got, _flat_pool(tabs, ids, mask))
+    assert store.stats.hot_hits == 0
+    assert store.stats.hot_rate == 0.0
+    assert store.stats.dram_fetches == int(mask.sum())
+    assert store.stats.flash_fetches == 0      # no host-DRAM bound -> all DRAM
+
+
+def test_admission_needs_admit_reads_batches():
+    """A row turns hot only once ``admit_reads`` distinct lookup batches
+    touched it; from then on it serves from the device tier."""
+    store = TieredEmbeddingStore(_tables(t=1), 4, admit_reads=3)
+    ids, mask = _bag([7])
+    for i in range(2):
+        store.pooled(ids, mask)
+        assert store.stats.admitted == 0
+        assert list(store.hot_residency()[0]) == []
+    store.pooled(ids, mask)                    # third batch: count hits 3
+    assert store.stats.admitted == 1
+    assert list(store.hot_residency()[0]) == [7]
+    assert store.stats.hot_hits == 0           # admitted after the serve
+    store.pooled(ids, mask)
+    assert store.stats.hot_hits == 1
+    assert store.row_count(0, 7) == 4
+
+
+def test_eviction_only_for_strictly_hotter_row():
+    """Capacity pressure evicts the least-popular resident, and only for a
+    newcomer with a strictly higher count — equal warmth never thrashes."""
+    store = TieredEmbeddingStore(_tables(t=1), 1, admit_reads=1)
+    a, am = _bag([3])
+    b, bm = _bag([9])
+    for _ in range(3):
+        store.pooled(a, am)                    # count(3) = 3, resident
+    assert list(store.hot_residency()[0]) == [3]
+
+    store.pooled(b, bm)                        # count(9) = 1 < 3: kept out
+    assert store.stats.evicted == 0
+    assert list(store.hot_residency()[0]) == [3]
+    for _ in range(2):
+        store.pooled(b, bm)                    # count(9) = 3 == 3: still out
+    assert store.stats.evicted == 0
+    assert list(store.hot_residency()[0]) == [3]
+
+    store.pooled(b, bm)                        # count(9) = 4 > 3: evict 3
+    assert store.stats.evicted == 1
+    assert list(store.hot_residency()[0]) == [9]
+    assert store.stats.hot_rows == 1
+
+
+def test_host_dram_flash_accounting():
+    """Cold fetches charge flash until the row enters the host-DRAM
+    working set (LRU over ``host_dram_rows``), DRAM afterwards."""
+    store = TieredEmbeddingStore(
+        _tables(t=1), 0, host_dram_rows=2
+    )
+    ids, mask = _bag([5])
+    store.pooled(ids, mask)                    # miss the working set
+    assert (store.stats.flash_fetches, store.stats.dram_fetches) == (1, 0)
+    store.pooled(ids, mask)                    # LRU-resident now
+    assert (store.stats.flash_fetches, store.stats.dram_fetches) == (1, 1)
+
+    store.pooled(*_bag([6]))
+    store.pooled(*_bag([7]))                   # capacity 2: row 5 evicted
+    store.pooled(ids, mask)                    # flash again
+    assert store.stats.flash_fetches == 4
+    assert store.stats.dram_fetches == 1
+    assert store.stats.flash_io.num_ios == 4
+    assert store.stats.dram_io.num_ios == 1
+
+
+def test_generation_bump_refreshes_stale_slots():
+    """After ``load_tables`` every resident slot is stale; the next lookup
+    refreshes it in place and serves the new bytes, never the old."""
+    old = _tables(t=1)
+    new = _tables(t=1, seed=5)
+    store = TieredEmbeddingStore(old, 4, admit_reads=1)
+    ids, mask = _bag([2])
+    store.pooled(ids, mask)                    # admit under generation 0
+    store.pooled(ids, mask)
+    assert store.stats.hot_hits == 1
+
+    assert store.load_tables(new) == 1
+    got = store.pooled(ids, mask)
+    assert np.array_equal(got, _flat_pool(new, ids, mask))
+    assert store.stats.stale_refreshes == 1
+    assert store.stats.generation == 1
+    # the refreshed slot is fresh again: no second refresh, still a hot hit
+    store.pooled(ids, mask)
+    assert store.stats.stale_refreshes == 1
+    assert store.stats.hot_hits == 3
+
+
+def test_capacity_and_residency_gauges():
+    """Skewed traffic: residency never exceeds capacity and the gauges
+    track admitted-minus-evicted exactly."""
+    store = TieredEmbeddingStore(_tables(), 4, admit_reads=1)
+    rng = np.random.default_rng(3)
+    for _ in range(30):
+        ids = rng.zipf(1.5, (4, 2, 3)) % 40
+        store.pooled(ids, np.ones(ids.shape, np.float32))
+    res = store.hot_residency()
+    for ti in (0, 1):
+        assert len(res[ti]) <= 4
+    assert store.stats.hot_rows == store.stats.admitted - store.stats.evicted
+    assert store.stats.hot_bytes == store.stats.hot_rows * store.row_bytes
+    assert store.stats.hot_rate > 0.3          # the skew pays off
+
+
+def test_kernel_path_matches_exact_pooling():
+    """Fully-hot bags served by the Pallas ``embedding_bag`` kernel agree
+    with the exact numpy path to float tolerance."""
+    tabs = _tables(t=2, v=16, e=8)
+    store = TieredEmbeddingStore(tabs, 16, admit_reads=1)
+    rng = np.random.default_rng(4)
+    ids = rng.integers(0, 16, (4, 2, 5))
+    mask = (rng.random((4, 2, 5)) < 0.8).astype(np.float32)
+    store.pooled(ids, mask)                    # admit everything touched
+    exact = store.pooled(ids, mask)
+    viak = store.pooled(ids, mask, use_kernel=True)
+    assert store.stats.kernel_bags > 0
+    np.testing.assert_allclose(viak, exact, atol=1e-5)
+    assert np.array_equal(exact, _flat_pool(tabs, ids, mask))
+
+
+def test_sparse_update_is_adagrad_and_refreshes_hot():
+    """``apply_sparse_update`` applies the row-wise AdaGrad mirror to the
+    host tier and rewrites resident hot copies in the same lock."""
+    tabs = _tables(t=1, v=10, e=4)
+    store = TieredEmbeddingStore(tabs, 4, admit_reads=1)
+    ids, mask = _bag([[1, 3]], t=1, l=2)
+    store.pooled(ids, mask)                    # rows 1 and 3 go hot
+    store.pooled(ids, mask)
+    assert sorted(store.hot_residency()[0]) == [1, 3]
+
+    lr, eps = 0.1, 1e-8
+    dpooled = np.full((1, 1, 4), 2.0, np.float32)
+    store.apply_sparse_update(dpooled, ids, mask, lr=lr, eps=eps)
+
+    # manual mirror: each id gets dpooled * (1/2) (mean-pool weight)
+    rg = np.full((4,), 1.0, np.float32)
+    g2 = np.mean(rg ** 2)
+    want = tabs.copy()
+    for r in (1, 3):
+        want[0, r] -= (lr / np.sqrt(g2 + eps)) * rg
+    host = store.host_tables()
+    np.testing.assert_allclose(host, want, rtol=1e-6)
+    assert store.stats.refreshed == 2
+
+    # hot copies match the updated host rows bit-for-bit
+    got = store.pooled(*_bag([1]))
+    assert np.array_equal(got[0, 0], host[0, 1])
+    assert store.stats.hot_hits >= 3
+
+
+# -- property test: capacity + latest-generation serving --------------------
+
+
+def _drive(seed: int) -> None:
+    """Random op sequence; after every op the store must (i) respect the
+    hot capacity, (ii) keep the residency gauges consistent, and (iii)
+    serve byte-exact latest-generation rows for any probe."""
+    rng = np.random.default_rng(seed)
+    t, v, e, cap = 2, 24, 4, 3
+    store = TieredEmbeddingStore(
+        _tables(t, v, e, seed=seed), cap, admit_reads=2, host_dram_rows=6
+    )
+    probe_ids = rng.integers(0, v, (3, t, 4))
+    probe_mask = (rng.random((3, t, 4)) < 0.8).astype(np.float32)
+    for _ in range(25):
+        op = rng.integers(0, 4)
+        if op == 0:
+            ids = rng.zipf(1.4, (2, t, 3)) % v
+            store.pooled(ids, np.ones(ids.shape, np.float32))
+        elif op == 1:
+            ids = rng.integers(0, v, (2, t, 3))
+            mask = (rng.random(ids.shape) < 0.7).astype(np.float32)
+            dp = rng.normal(0, 1, (2, t, e)).astype(np.float32)
+            store.apply_sparse_update(dp, ids, mask, lr=0.05)
+        elif op == 2:
+            store.bump_generation()
+        else:
+            store.load_tables(
+                rng.normal(0, 0.01, (t, v, e)).astype(np.float32)
+            )
+        res = store.hot_residency()
+        assert all(len(res[ti]) <= cap for ti in range(t))
+        assert store.stats.hot_rows == (
+            store.stats.admitted - store.stats.evicted
+        )
+        assert store.stats.hot_bytes == store.stats.hot_rows * store.row_bytes
+        assert 0 <= store.stats.hot_rows <= t * cap
+        # latest-generation serving: the probe is byte-exact against the
+        # authoritative host copy no matter what the hot tier holds
+        got = store.pooled(probe_ids, probe_mask)
+        want = _flat_pool(store.host_tables(), probe_ids, probe_mask)
+        assert np.array_equal(got, want)
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.integers(min_value=0, max_value=10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_store_invariants_property(seed):
+        _drive(seed)
+
+else:
+
+    @pytest.mark.parametrize("seed", range(12))
+    def test_store_invariants_property(seed):
+        _drive(seed)

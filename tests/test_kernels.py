@@ -249,3 +249,106 @@ def test_ssd_chunk_kernel_matches_model_ssd():
     np.testing.assert_allclose(
         np.asarray(yk), np.asarray(y_model, np.float32), atol=5e-3, rtol=1e-2
     )
+
+
+# -- embedding_bag differential suite (ISSUE 9) ------------------------------
+#
+# kernel-vs-oracle parity on every bag shape the DLRM path produces: empty
+# bags, single-id bags, duplicate ids inside one bag, ids on the last table
+# row, and both pooling denominators (mean vs sum).
+
+
+@pytest.mark.parametrize("mode", ["mean", "sum"])
+def test_embedding_bag_empty_bags(mode):
+    """All-masked-out bags: mean pools to 0/max(0,1) == 0, sum to 0."""
+    table = jax.random.normal(KEY, (16, 8), jnp.float32)
+    ids = jax.random.randint(jax.random.PRNGKey(30), (4, 5), 0, 16, jnp.int32)
+    mask = jnp.zeros((4, 5), jnp.float32)
+    a = ops.embedding_bag(table, ids, mask, mode=mode, use_pallas=True)
+    bb = ref.embedding_bag(table, ids, mask, mode=mode)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bb), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(a), np.zeros((4, 8), np.float32))
+
+
+@pytest.mark.parametrize("mode", ["mean", "sum"])
+def test_embedding_bag_single_id_bags(mode):
+    """One live slot per bag: output must equal the selected row exactly."""
+    table = jax.random.normal(KEY, (32, 16), jnp.float32)
+    b, l = 6, 4
+    ids = jax.random.randint(jax.random.PRNGKey(31), (b, l), 0, 32, jnp.int32)
+    mask = jnp.zeros((b, l), jnp.float32).at[jnp.arange(b), jnp.arange(b) % l].set(1.0)
+    a = ops.embedding_bag(table, ids, mask, mode=mode, use_pallas=True)
+    bb = ref.embedding_bag(table, ids, mask, mode=mode)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bb), atol=1e-6)
+    picked = np.asarray(table)[np.asarray(ids)[np.arange(b), np.arange(b) % l]]
+    np.testing.assert_allclose(np.asarray(a), picked, atol=1e-6)
+
+
+@pytest.mark.parametrize("mode", ["mean", "sum"])
+def test_embedding_bag_duplicate_ids_one_bag(mode):
+    """The same id repeated in one bag must be accumulated per occurrence,
+    not deduplicated (multiplicity is part of the bag semantics)."""
+    table = jax.random.normal(KEY, (8, 8), jnp.float32)
+    ids = jnp.array([[3, 3, 3, 5], [0, 0, 7, 7]], jnp.int32)
+    mask = jnp.ones((2, 4), jnp.float32)
+    a = ops.embedding_bag(table, ids, mask, mode=mode, use_pallas=True)
+    bb = ref.embedding_bag(table, ids, mask, mode=mode)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bb), atol=1e-5)
+    t = np.asarray(table)
+    want0 = 3 * t[3] + t[5]
+    if mode == "mean":
+        want0 = want0 / 4.0
+    np.testing.assert_allclose(np.asarray(a)[0], want0, atol=1e-5)
+
+
+@pytest.mark.parametrize("mode", ["mean", "sum"])
+def test_embedding_bag_last_row_ids(mode):
+    """ids == V-1 select the final table row (the off-by-one block edge)."""
+    v, e = 19, 8
+    table = jax.random.normal(KEY, (v, e), jnp.float32)
+    ids = jnp.full((3, 4), v - 1, jnp.int32)
+    mask = jnp.ones((3, 4), jnp.float32)
+    a = ops.embedding_bag(table, ids, mask, mode=mode, use_pallas=True)
+    bb = ref.embedding_bag(table, ids, mask, mode=mode)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bb), atol=1e-5)
+    want = np.asarray(table)[v - 1] * (1.0 if mode == "mean" else 4.0)
+    np.testing.assert_allclose(np.asarray(a)[1], want, atol=1e-5)
+
+
+def test_embedding_bag_mean_vs_sum_denominator():
+    """mean == sum / max(live slots, 1) — the DLRM pooling denominator."""
+    table = jax.random.normal(KEY, (24, 8), jnp.float32)
+    ids = jax.random.randint(jax.random.PRNGKey(33), (5, 6), 0, 24, jnp.int32)
+    mask = (jax.random.uniform(jax.random.PRNGKey(34), (5, 6)) > 0.5).astype(
+        jnp.float32
+    )
+    s = ops.embedding_bag(table, ids, mask, mode="sum", use_pallas=True)
+    m = ops.embedding_bag(table, ids, mask, mode="mean", use_pallas=True)
+    denom = np.maximum(np.asarray(mask).sum(axis=1), 1.0)
+    np.testing.assert_allclose(
+        np.asarray(m), np.asarray(s) / denom[:, None], atol=1e-5
+    )
+    with pytest.raises(ValueError):
+        ops.embedding_bag(table, ids, mask, mode="max", use_pallas=False)
+
+
+def test_embedding_bag_ref_matches_dlrm_pooling():
+    """The ref oracle is the same formula DLRM.pooled_embeddings uses —
+    one pooling definition across model, store and kernel."""
+    from repro.models.dlrm import DLRM, DLRMConfig
+
+    cfg = DLRMConfig(num_dense=4, num_tables=2, vocab_per_table=20,
+                     embed_dim=8, max_ids_per_feature=5,
+                     bottom_mlp=(8, 4), top_mlp=(8, 1))
+    model = DLRM(cfg)
+    tables = jax.random.normal(KEY, (2, 20, 8), jnp.float32)
+    ids = jax.random.randint(jax.random.PRNGKey(35), (3, 2, 5), 0, 20, jnp.int32)
+    mask = (jax.random.uniform(jax.random.PRNGKey(36), (3, 2, 5)) > 0.4).astype(
+        jnp.float32
+    )
+    pooled = model.pooled_embeddings(tables, {"sparse_ids": ids, "sparse_mask": mask})
+    for t in range(2):
+        bagged = ref.embedding_bag(tables[t], ids[:, t], mask[:, t])
+        np.testing.assert_allclose(
+            np.asarray(pooled)[:, t], np.asarray(bagged), atol=1e-6
+        )

@@ -333,8 +333,10 @@ def test_report_shares_sum_to_100_and_split_proportionally():
     rows = build_report(doc)
     r = rows["a"]
     total = (r["storage_pct"] + r["cache_fill_pct"] + r["transform_pct"]
-             + r["load_pct"] + r["compute_pct"] + r["unattributed_pct"])
+             + r["load_pct"] + r["embed_fetch_pct"] + r["compute_pct"]
+             + r["unattributed_pct"])
     assert total == pytest.approx(100.0, abs=1e-9)
+    assert r["embed_fetch_pct"] == 0.0      # no embed.fetch spans recorded
     assert r["compute_pct"] == pytest.approx(60.0)
     # blocked 40% split by span weight: storage 30/60, fill 10/60, ...
     assert r["storage_pct"] == pytest.approx(20.0)
@@ -342,6 +344,31 @@ def test_report_shares_sum_to_100_and_split_proportionally():
     assert r["transform_pct"] == pytest.approx(40.0 * 10 / 60)
     assert r["load_pct"] == pytest.approx(40.0 * 10 / 60)
     assert r["unattributed_pct"] == 0.0
+    assert check(doc) == []
+
+
+def test_report_embed_fetch_is_direct_share_not_stall_split():
+    """``embed.fetch`` (ISSUE 9) is measured directly against the wall
+    clock — it is not one of the client.stall weight buckets — and
+    compute absorbs the remainder so the identity still closes at 100."""
+    doc = {
+        "traceEvents": [
+            _event("session.run", 0, 1000),
+            _event("client.stall", 10, 400),
+            _event("storage.read", 20, 40),
+            _event("embed.fetch", 500, 100),
+            _event("embed.fetch", 700, 100),
+        ],
+        "otherData": {"open_spans": 0},
+    }
+    r = build_report(doc)["a"]
+    assert r["embed_fetch_pct"] == pytest.approx(20.0)
+    assert r["storage_pct"] == pytest.approx(40.0)    # full blocked share
+    assert r["compute_pct"] == pytest.approx(40.0)
+    total = (r["storage_pct"] + r["cache_fill_pct"] + r["transform_pct"]
+             + r["load_pct"] + r["embed_fetch_pct"] + r["compute_pct"]
+             + r["unattributed_pct"])
+    assert total == pytest.approx(100.0, abs=1e-9)
     assert check(doc) == []
 
 
@@ -434,7 +461,7 @@ def test_smoke_artifact_passes_report_check(tmp_path):
     for r in rows.values():
         assert sum(r[k] for k in (
             "storage_pct", "cache_fill_pct", "transform_pct", "load_pct",
-            "compute_pct", "unattributed_pct",
+            "embed_fetch_pct", "compute_pct", "unattributed_pct",
         )) == pytest.approx(100.0, abs=0.1)
     assert report_main([str(out), "--check"]) == 0
     assert report_main([str(out), "--json"]) == 0
