@@ -36,6 +36,7 @@ SECTIONS = [
     "optimizations",    # Table 12
     "kernels",          # §7.2 fused transform + hot kernels
     "engine",           # §7.2 fused TransformEngine vs per-feature (ISSUE 5)
+    "extract",          # §6.3 batched stripe decode vs per-stream (ISSUE 10)
     "obs",              # telemetry overhead + Table-7 stall attribution
     "sanitizers",       # race/interleaving sanitizers: zero-cost-when-off (ISSUE 8)
     "power",            # Fig 1

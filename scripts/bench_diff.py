@@ -36,6 +36,10 @@ _DERIVED_GUARDS: Dict[Tuple[str, str], Tuple[str, float]] = {
     ("train_e2e.hot_rate", "tiered"): ("floor", 0.05),
     ("train_e2e.step_breakdown", "data_pct"): ("ceil", 10.0),
     ("train_e2e.step_breakdown", "embed_pct"): ("ceil", 10.0),
+    # batched decode must keep amortizing launches and beating the
+    # per-stream engine (bench_extract.py also asserts absolute floors)
+    ("extract.fused_batched", "amortization"): ("floor", 50.0),
+    ("extract.fused_batched", "extract_cut"): ("floor", 0.30),
 }
 
 
@@ -60,7 +64,9 @@ def _derived(report: Dict) -> Dict[str, Dict[str, float]]:
                 if not _:
                     continue
                 try:
-                    vals[key] = float(raw)
+                    # ratio/percent annotations ("1.54x", "76%") are
+                    # still numbers to the trend gate
+                    vals[key] = float(raw.rstrip("x%"))
                 except ValueError:
                     continue
             if vals:

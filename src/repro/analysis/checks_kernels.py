@@ -23,6 +23,12 @@ inside its net.  Two structural guarantees:
     ``tests/test_kernels.py`` — a dispatchable kernel nobody
     parity-tests is exactly the untested-op hole, one layer up.
 
+    And the decode layer: every public kernel ``src/repro/kernels/decode.py``
+    defines (``xor_decrypt``, ``dense_unpack``, ``ragged_gather``) must be
+    named by the decode differential suite in ``tests/test_decode.py`` —
+    the extract path promises byte-identical batches across engines, which
+    is only a promise while each decode kernel sits inside that net.
+
 A new op can therefore never land without a ref implementation and a
 differential test naming it.
 """
@@ -46,6 +52,8 @@ REF = "src/repro/kernels/ref.py"
 SUITE = "tests/test_engine.py"
 OPS = "src/repro/kernels/ops.py"
 KSUITE = "tests/test_kernels.py"
+DECODE = "src/repro/kernels/decode.py"
+DSUITE = "tests/test_decode.py"
 
 
 def _op_defs(mod) -> Dict[str, Optional[int]]:
@@ -126,6 +134,7 @@ def check_kernel_parity(ctx: CheckContext):
             f"nor a {transform_name(name)!r} spec appears)",
         ))
     findings.extend(_check_ops_coverage(ctx))
+    findings.extend(_check_decode_coverage(ctx))
     return findings
 
 
@@ -162,4 +171,33 @@ def _check_ops_coverage(ctx: CheckContext) -> List[Finding]:
         )
         for name, line in sorted(kernels.items())
         if name not in ksuite.text
+    ]
+
+
+def _check_decode_coverage(ctx: CheckContext) -> List[Finding]:
+    """K002, decode layer: every public kernel in ``kernels/decode.py``
+    must be named by the decode differential suite in
+    ``tests/test_decode.py`` — the engines' byte-identity guarantee rests
+    on each decode kernel staying inside the parity net."""
+    decode = ctx.load(DECODE)
+    if decode is None:
+        return []
+    kernels = _public_kernel_defs(decode)
+    if not kernels:
+        return []
+    dsuite = ctx.load(DSUITE)
+    if dsuite is None:
+        return [Finding(
+            K002, DSUITE, 1,
+            "decode differential suite missing — no decode kernel is "
+            "parity-tested",
+        )]
+    return [
+        Finding(
+            K002, DECODE, line,
+            f"decode kernel {name!r} is never exercised by {DSUITE} — an "
+            "extract-path op without a differential test",
+        )
+        for name, line in sorted(kernels.items())
+        if name not in dsuite.text
     ]

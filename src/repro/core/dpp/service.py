@@ -56,6 +56,8 @@ class DPPSession:
         dispatch_budget: int = 3,
         elastic_policy: Optional[ElasticPolicy] = None,
         engine: str = "numpy",
+        decode_engine: str = "numpy",
+        double_buffer: bool = True,
         clock: Callable[[], float] = time.time,
         tracer=NULL_TRACER,
     ):
@@ -64,6 +66,8 @@ class DPPSession:
         self.name = name                   # tenant id for the stripe cache
         self._on_stop = on_stop            # e.g. release the tenant's share
         self.engine = engine               # TransformEngine for every worker
+        self.decode_engine = decode_engine # DecodeEngine for every worker
+        self.double_buffer = double_buffer # fetch/decode overlap in extract
         self.tracer = tracer
         if tracer.enabled and not table.fs.tracer.enabled:
             # storage/cache spans come from the shared fs: attach once,
@@ -152,7 +156,9 @@ class DPPSession:
         w = DPPWorker(
             f"w{self._wid}", self.master, self.table,
             fail_after_splits=fail_after, tensor_cache=self.tensor_cache,
-            tenant=self.name, engine=self.engine, tracer=self.tracer,
+            tenant=self.name, engine=self.engine,
+            decode_engine=self.decode_engine, double_buffer=self.double_buffer,
+            tracer=self.tracer,
         )
         self._wid += 1
         self.workers.append(w)
@@ -362,8 +368,12 @@ class DPPService:
 
         ``engine="pallas"`` (forwarded to every worker) runs the transform
         stage wave-fused through ``kernels.fused_transform`` instead of
-        per-feature numpy; both engines produce byte-identical batches, so
-        mixed-engine fleets can share one ``TensorCache``."""
+        per-feature numpy; ``decode_engine="pallas"`` does the same for the
+        extract stage (whole-stripe batched decode via ``kernels.decode``,
+        see ``repro.core.decode``) and ``double_buffer`` overlaps stripe
+        N+1's extent fetch with stripe N's decode.  All engines produce
+        byte-identical batches, so mixed-engine fleets can share one
+        ``TensorCache``."""
         reserve = (dram_share or flash_share) and self.stripe_cache is not None
         if reserve:
             # validate the share up front (so an over-committed request

@@ -61,6 +61,12 @@ class WorkerMetrics:
     kernel_launches: int = counter()           # fused + per-feature calls
     transform_fused_s: float = counter(0.0)    # transform_s: fused path
     transform_fallback_s: float = counter(0.0) # transform_s: numpy path
+    # per-engine extract accounting (mirrored from DecodeStats):
+    extract_fused_s: float = counter(0.0)      # decode: batched-kernel path
+    extract_fallback_s: float = counter(0.0)   # decode: per-stream path
+    decode_launches: int = counter()           # decode kernel launches
+    # per-extent I/O sizes of this worker's stripe fetches (Table 6)
+    io_sizes: List[int] = counter(factory=list)
 
     def merge(self, o: "WorkerMetrics") -> None:
         # summing behavior comes from the per-field counter/gauge
@@ -127,6 +133,8 @@ class DPPWorker:
         prefetch_stripes: int = 2,                 # extract-ahead depth
         tenant: Optional[str] = None,              # owning job for cache shares
         engine="numpy",                            # TransformEngine name/factory
+        decode_engine="numpy",                     # DecodeEngine name/factory
+        double_buffer: bool = True,                # overlap fetch N+1 / decode N
         tracer=NULL_TRACER,                        # span Tracer (obs layer)
     ):
         self.worker_id = worker_id
@@ -139,6 +147,9 @@ class DPPWorker:
         # transform stage executor (§7.2): "numpy" = per-feature reference,
         # "pallas" = wave-fused kernel launches; engines are byte-identical
         self.engine = make_engine(engine, self.pipeline)
+        # extract-stage decode strategy, same contract (see repro.core.decode)
+        self.decode_engine = decode_engine
+        self.double_buffer = double_buffer
         self.buffer: "queue.Queue[Dict[str, np.ndarray]]" = queue.Queue(buffer_size)
         self.metrics = WorkerMetrics()
         self.fail_after_splits = fail_after_splits
@@ -176,6 +187,7 @@ class DPPWorker:
         reader = TableReader(
             self.table, list(self.spec.feature_ids), record_popularity=False,
             tenant=self.tenant, tracer=self.tracer,
+            decode_engine=self.decode_engine, double_buffer=self.double_buffer,
         )
         while not self._stop.is_set():
             if self._drain.is_set():
@@ -346,6 +358,7 @@ class DPPWorker:
                 m.cache_rx_bytes += sr.bytes_from_cache
                 m.stripes_read += 1
                 m.rows_decoded += sr.rows_decoded
+                m.io_sizes.extend(sr.io_sizes)
                 m.extract_out_bytes += sr.batch.nbytes()
 
                 t2 = time.perf_counter()
@@ -397,6 +410,13 @@ class DPPWorker:
             raise
 
         producer.join()
+        # decode-engine counters are cumulative per exclusive reader, so a
+        # straight mirror (like the transform mirror above) keeps the
+        # worker metric cumulative; done once the producer is quiescent
+        ds = reader.decode.stats
+        m.extract_fused_s = ds.fused_s
+        m.extract_fallback_s = ds.fallback_s
+        m.decode_launches = ds.kernel_launches
         t4 = time.perf_counter()
         _drain(final=True)
         t_load = time.perf_counter()

@@ -120,7 +120,10 @@ def encode_stream(payload: bytes, codec: Optional[str] = None, level: int = 1) -
     return bytes([c.cid]) + _encrypt(c.compress(payload, level))
 
 
-def decode_stream(data: bytes) -> bytes:
+def split_stream(data: bytes) -> Tuple[Codec, bytes]:
+    """Split a raw stream into (codec, still-encrypted body) without
+    touching the bytes — decode engines batch the decrypt pass across
+    streams and time decrypt vs decompress separately."""
     cid = data[0]
     codec = _CODECS.get(cid)
     if codec is None:
@@ -128,7 +131,12 @@ def decode_stream(data: bytes) -> bytes:
             f"stream written with unavailable codec id {cid} "
             f"(available: {available_codecs()})"
         )
-    return codec.decompress(_decrypt(data[1:]))
+    return codec, data[1:]
+
+
+def decode_stream(data: bytes) -> bytes:
+    codec, body = split_stream(data)
+    return codec.decompress(_decrypt(body))
 
 
 # ---------------------------------------------------------------------------
@@ -160,6 +168,35 @@ def _unpack_arrays(data: bytes) -> List[np.ndarray]:
     return out
 
 
+_DTYPE_CACHE: Dict[bytes, np.dtype] = {}
+
+
+def packed_array_headers(data: bytes) -> List[Tuple[np.dtype, int, int]]:
+    """Header walk over a ``_pack_arrays`` payload without materializing
+    the arrays: [(dtype, data_offset, nbytes), ...].  Data regions are NOT
+    word-aligned (dtype strings have odd lengths) — the batched decode
+    engine gathers them with per-region shifts."""
+    (n,) = struct.unpack_from("<I", data, 0)
+    pos = 4
+    out: List[Tuple[np.dtype, int, int]] = []
+    for _ in range(n):
+        (dl,) = struct.unpack_from("<I", data, pos)
+        pos += 4
+        # bytes() tolerates buffer inputs (ndarray payload views from the
+        # batched engine's zero-copy decrypt); the cache keeps the hot
+        # per-stream walk from re-parsing the same few dtype strings
+        key = bytes(data[pos:pos + dl])
+        dt = _DTYPE_CACHE.get(key)
+        if dt is None:
+            dt = _DTYPE_CACHE[key] = np.dtype(key.decode())
+        pos += dl
+        (nb,) = struct.unpack_from("<Q", data, pos)
+        pos += 8
+        out.append((dt, pos, nb))
+        pos += nb
+    return out
+
+
 def _dense_payload(col: np.ndarray) -> bytes:
     present = ~np.isnan(col)
     packed = np.packbits(present.astype(np.uint8))
@@ -188,6 +225,28 @@ def _sparse_unpayload(data: bytes) -> SparseColumn:
         values=arrays[1].astype(np.int64),
         scores=arrays[2].astype(np.float32) if len(arrays) > 2 else None,
     )
+
+
+# sparse_map blob format-version sentinel ("SPM2" as a negative int64 —
+# a legacy blob's first array holds non-negative feature ids, so the two
+# layouts can never be confused).  v2 stores an explicit per-feature
+# scores-presence flag array: the legacy layout inferred presence from
+# ``len(scores)``, which collapses a *present-but-empty* scores array
+# (a 0-nnz stripe of a scored feature) into ``None`` — diverging from
+# the flattened encoding's round-trip.
+SPARSE_MAP_V2 = -0x53504D32
+
+
+def sparse_map_layout(
+    arrays: Sequence[np.ndarray],
+) -> Tuple[np.ndarray, Optional[np.ndarray], int]:
+    """(fids, scores-present flags or None, index of the first offsets
+    array).  Detects the v2 sparse_map layout vs the legacy one (flags
+    absent: presence falls back to the lossy emptiness heuristic)."""
+    a0 = arrays[0]
+    if a0.size == 1 and a0.dtype.kind == "i" and int(a0[0]) == SPARSE_MAP_V2:
+        return arrays[1].astype(np.int64), arrays[2].astype(bool), 3
+    return a0.astype(np.int64), None, 1
 
 
 # ---------------------------------------------------------------------------
@@ -285,8 +344,20 @@ def write_dwrf(batch: ColumnBatch, opts: DwrfWriterOptions) -> DwrfFile:
                 + [part.dense[f] for f in sorted(part.dense)]
             )
             emit(-1, "dense_map", dense_blob)
-            sparse_parts: List[np.ndarray] = [np.asarray(sorted(part.sparse), np.int64)]
-            for f in sorted(part.sparse):
+            sfids = sorted(part.sparse)
+            # v2 layout: sentinel, fids, explicit scores-presence flags,
+            # then (offsets, values, scores) per feature — a scores-absent
+            # feature still ships an empty placeholder array, but the flag
+            # (not the length) decides presence on decode
+            sparse_parts: List[np.ndarray] = [
+                np.asarray([SPARSE_MAP_V2], np.int64),
+                np.asarray(sfids, np.int64),
+                np.asarray(
+                    [int(part.sparse[f].scores is not None) for f in sfids],
+                    np.int64,
+                ),
+            ]
+            for f in sfids:
                 c = part.sparse[f]
                 sparse_parts += [c.offsets, c.values]
                 sparse_parts.append(
@@ -402,16 +473,19 @@ def decode_stripe_features(
                     dense[int(fid)] = arrays[1 + i].astype(np.float32)
         elif s.kind == "sparse_map":
             arrays = _unpack_arrays(payload)
-            fids = arrays[0].astype(np.int64)
+            fids, flags, base = sparse_map_layout(arrays)
             for i, fid in enumerate(fids):
-                off = arrays[1 + 3 * i].astype(np.int64)
-                val = arrays[2 + 3 * i].astype(np.int64)
-                sc = arrays[3 + 3 * i]
+                off = arrays[base + 3 * i].astype(np.int64)
+                val = arrays[base + 1 + 3 * i].astype(np.int64)
+                sc = arrays[base + 2 + 3 * i]
+                has_scores = (
+                    bool(flags[i]) if flags is not None else len(sc) > 0
+                )
                 if fid in want:
                     sparse[int(fid)] = SparseColumn(
                         offsets=off,
                         values=val,
-                        scores=sc.astype(np.float32) if len(sc) else None,
+                        scores=sc.astype(np.float32) if has_scores else None,
                     )
     return ColumnBatch(
         num_rows=stripe.num_rows, dense=dense, sparse=sparse, labels=labels

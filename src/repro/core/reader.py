@@ -26,6 +26,7 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import dwrf
+from repro.core.decode import make_decode_engine
 from repro.core.schema import ColumnBatch
 from repro.core.tectonic import ExtentRead, IOStats, TectonicFS
 from repro.core.warehouse import PartitionMeta, Table
@@ -76,6 +77,10 @@ class StripeRead:
     rows_decoded: int            # stripe rows decoded (>= row_end - row_start)
     bytes_from_cache: int = 0    # of bytes_read, served by the stripe cache
     bytes_from_storage: int = 0
+    # per-extent I/O sizes of this stripe's fetch (Table 6 distribution —
+    # previously only read_rows reported these, so streaming consumers
+    # lost the size histogram entirely)
+    io_sizes: List[int] = dataclasses.field(default_factory=list)
 
 
 def _trim_stripe(
@@ -150,8 +155,13 @@ def plan_reads(
                 if s.fid in want_f or (include_labels and s.kind == "labels"):
                     wanted.append((si, s.fid, s))
         else:
-            # map encoding: must read the monolithic map (+ labels) streams
+            # map encoding: must read the monolithic map streams; labels
+            # streams still follow the projection flag, like the
+            # flattened branch (they were unconditionally planned before,
+            # inflating bytes_wanted for label-free projections)
             for s in stripe.streams:
+                if not include_labels and s.kind == "labels":
+                    continue
                 wanted.append((si, s.fid, s))
 
     streams = sorted((s for _, _, s in wanted), key=lambda s: s.offset)
@@ -185,6 +195,8 @@ class TableReader:
         record_popularity: bool = True,
         tenant: Optional[str] = None,
         tracer=NULL_TRACER,
+        decode_engine=None,
+        double_buffer: bool = False,
     ):
         self.table = table
         self.feature_ids = list(feature_ids)
@@ -193,6 +205,13 @@ class TableReader:
         # job identity for the stripe cache's per-tenant shares/accounting
         self.tenant = tenant
         self.tracer = tracer
+        # stripe decode strategy (name / instance / factory — see
+        # repro.core.decode); engines are byte-compatible, so this never
+        # changes the batches, only how they are produced
+        self.decode = make_decode_engine(decode_engine)
+        # overlap stripe N+1's extent fetch with stripe N's decode in
+        # iter_stripes (the producer half of the DPP worker)
+        self.double_buffer = double_buffer
         self._job_feature_bytes: Dict[int, float] = {}
 
     def _fetch_streams(
@@ -250,9 +269,9 @@ class TableReader:
             stripe = footer.stripes[si]
             with self.tracer.span(
                 "extract.decode", tenant=self.tenant or "",
-                path=meta.path, stripe=si,
+                path=meta.path, stripe=si, engine=self.decode.name,
             ) as sp:
-                part = dwrf.decode_stripe_features(
+                part = self.decode.decode_stripe(
                     stripe, per_stripe[si], self.feature_ids
                 )
                 sp.set(rows=part.num_rows)
@@ -295,23 +314,58 @@ class TableReader:
         by_stripe: Dict[int, List[Tuple[int, int, dwrf.StreamInfo]]] = {}
         for si, fid, s in full.wanted:
             by_stripe.setdefault(si, []).append((si, fid, s))
+        plans: List[Tuple[int, ReadPlan]] = []
         for si in full.stripe_indices:
-            stripe = footer.stripes[si]
             wanted = by_stripe.get(si, [])
             streams = sorted((s for _, _, s in wanted), key=lambda s: s.offset)
             extents = _coalesce_extents(streams, self.coalesce_window)
-            plan = ReadPlan(
+            plans.append((si, ReadPlan(
                 extents=extents, wanted=wanted,
                 bytes_wanted=sum(s.length for s in streams),
                 bytes_planned=sum(l for _, l in extents),
                 stripe_indices=[si], stripes_total=len(footer.stripes),
+            )))
+
+        def _start_fetch(k: int):
+            """Kick off plan k's extent fetch on a daemon thread (the
+            double-buffer slot: stripe N+1's I/O overlaps stripe N's
+            decode).  Errors surface at join time, on the caller."""
+            import threading
+
+            slot: Dict[str, object] = {}
+
+            def run():
+                try:
+                    slot["res"] = self._fetch_streams(meta, plans[k][1])
+                except BaseException as exc:
+                    slot["err"] = exc
+
+            th = threading.Thread(
+                target=run, name=f"stripe-prefetch-{plans[k][0]}", daemon=True
             )
-            per_stripe, feature_bytes, io = self._fetch_streams(meta, plan)
+            th.start()
+            return slot, th
+
+        pending = _start_fetch(0) if self.double_buffer and plans else None
+        for k, (si, plan) in enumerate(plans):
+            if pending is not None:
+                slot, th = pending
+                th.join()
+                # start stripe k+1's fetch before decoding stripe k
+                pending = (
+                    _start_fetch(k + 1) if k + 1 < len(plans) else None
+                )
+                if "err" in slot:
+                    raise slot["err"]
+                per_stripe, feature_bytes, io = slot["res"]
+            else:
+                per_stripe, feature_bytes, io = self._fetch_streams(meta, plan)
+            stripe = footer.stripes[si]
             with self.tracer.span(
                 "extract.decode", tenant=self.tenant or "",
-                path=meta.path, stripe=si,
+                path=meta.path, stripe=si, engine=self.decode.name,
             ) as sp:
-                part = dwrf.decode_stripe_features(
+                part = self.decode.decode_stripe(
                     stripe, per_stripe.get(si, {}), self.feature_ids
                 )
                 sp.set(rows=part.num_rows)
@@ -328,6 +382,7 @@ class TableReader:
                 rows_decoded=rows_decoded,
                 bytes_from_cache=io.cache_bytes,
                 bytes_from_storage=io.storage_bytes,
+                io_sizes=[l for _, l in plan.extents],
             )
 
     def read_partition(

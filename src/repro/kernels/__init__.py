@@ -18,18 +18,24 @@ DPP worker's fused TransformEngine on top of ``fused_transform``.
 """
 from repro.kernels.ops import (
     bucketize,
+    dense_unpack,
     embedding_bag,
     flash_attention,
     fused_transform,
+    ragged_gather,
     sigrid_hash,
     ssd_chunk_forward,
+    xor_decrypt,
 )
 
 __all__ = [
     "bucketize",
+    "dense_unpack",
     "embedding_bag",
     "flash_attention",
     "fused_transform",
+    "ragged_gather",
     "sigrid_hash",
     "ssd_chunk_forward",
+    "xor_decrypt",
 ]

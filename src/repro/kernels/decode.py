@@ -1,0 +1,152 @@
+"""Pallas TPU kernels for batched stripe decode — the extract half of §6.3.
+
+Table 9 shows extract (decrypt + decompress + column decode) dominating
+DPP preprocessing compute alongside transform.  PR 5 fused the transform
+stage; these kernels fuse the decode stage: instead of one numpy pass per
+stream and one scatter/gather per feature, a whole stripe decodes in at
+most three launches:
+
+  * ``xor_decrypt`` — the datacenter-tax byte pass.  Every stream's
+    encrypted body is concatenated, padded to int32 words, and XORed with
+    the replicated key in one launch (byte-wise XOR is position-local, so
+    the word view is exact).
+  * ``dense_unpack`` — batched presence-bitmap unpack + dense scatter,
+    features-major: row f of the bitmap operand holds feature f's
+    ``np.packbits`` bytes viewed as little-endian int32 words, row f of
+    the value operand its present float32 values as bit patterns.  The
+    kernel expands bits (packbits is MSB-first per byte), ranks present
+    rows with a prefix sum, gathers each row's value, and emits NaN bits
+    for absent rows — all in the int32 bit domain, so NaN/subnormal
+    payloads round-trip exactly and no float demotion rule is needed.
+  * ``ragged_gather`` — batched extraction of byte-unaligned array
+    regions (sparse offsets/values/scores and map-encoded columns) from
+    the concatenated payload buffer: ``out = src[idx] >> shift | src[idx
+    + 1] << (32 - shift)``, one launch for every region of every stream.
+
+``repro.core.decode.PallasDecodeEngine`` packs the operands and owns the
+demotion rules; the jnp oracles live in ``repro.kernels.ref`` and the
+dispatch wrappers in ``repro.kernels.ops`` (same ``use_pallas`` contract
+as every other kernel).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+XOR_KEY32 = 0x5A5A5A5A           # dwrf._XOR_KEY replicated into each byte
+NAN_BITS = int(np.float32(np.nan).view(np.int32))   # the np.full(nan) fill
+
+
+def _xor_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] ^ jnp.int32(XOR_KEY32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def xor_decrypt(
+    words: jax.Array,            # (n, 128) int32 — padded byte stream
+    *,
+    block_rows: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    """XOR every byte with the stream key (one pass, any stream mix)."""
+    rows, lanes = words.shape
+    br = min(block_rows, max(rows, 1))
+    return pl.pallas_call(
+        _xor_kernel,
+        grid_spec=pl.GridSpec(
+            grid=(pl.cdiv(rows, br),),
+            in_specs=[pl.BlockSpec((br, lanes), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((br, lanes), lambda i: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
+        interpret=interpret,
+    )(words)
+
+
+def _dense_kernel(bm_ref, val_ref, out_ref):
+    bm = bm_ref[...]                               # (bf, W) i32 bitmap words
+    vals = val_ref[...]                            # (bf, C) i32 value bits
+    bf, w = bm.shape
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 32), 2)
+    # np.packbits is MSB-first within each byte while the int32 word is a
+    # little-endian byte view, so row 32w+k lives at bit 8*(k//8)+7-(k%8)
+    shift = (lane & ~7) + 7 - (lane & 7)
+    bits = jax.lax.shift_right_logical(bm[:, :, None], shift) & 1
+    bits = bits.reshape(bf, w * 32)                # (bf, rows_pad) presence
+    rank = jnp.cumsum(bits, axis=1) - 1            # index of each present row
+    idx = jnp.clip(rank, 0, vals.shape[1] - 1)
+    gathered = jnp.take_along_axis(vals, idx, axis=1)
+    out_ref[...] = jnp.where(bits == 1, gathered, jnp.int32(NAN_BITS))
+
+
+@functools.partial(jax.jit, static_argnames=("block_feats", "interpret"))
+def dense_unpack(
+    bitmap_words: jax.Array,     # (F, W) int32 — packbits bytes, LE words
+    values: jax.Array,           # (F, C) int32 — present f32 values as bits
+    *,
+    block_feats: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched presence-bitmap unpack + dense scatter -> (F, W*32) f32 bits
+    (NaN bits where absent); the caller slices column 0..rows."""
+    feats, w = bitmap_words.shape
+    c = values.shape[1]
+    bf = min(block_feats, max(feats, 1))
+    return pl.pallas_call(
+        _dense_kernel,
+        grid_spec=pl.GridSpec(
+            grid=(pl.cdiv(feats, bf),),
+            in_specs=[
+                pl.BlockSpec((bf, w), lambda i: (i, 0)),
+                pl.BlockSpec((bf, c), lambda i: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((bf, w * 32), lambda i: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((feats, w * 32), jnp.int32),
+        interpret=interpret,
+    )(bitmap_words, values)
+
+
+def _gather_kernel(src_ref, idx_ref, sh_ref, out_ref):
+    src = src_ref[...].reshape(-1)                 # (S*128,) source words
+    idx = idx_ref[...]                             # (m, 128) low-word index
+    sh = sh_ref[...]                               # (m, 128) bit shift {0,8,16,24}
+    lo = jax.lax.shift_right_logical(jnp.take(src, idx, axis=0), sh)
+    hi = jnp.take(src, idx + 1, axis=0)
+    hi = jnp.where(sh == 0, 0, jax.lax.shift_left(hi, (32 - sh) & 31))
+    out_ref[...] = lo | hi
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def ragged_gather(
+    src: jax.Array,              # (S, 128) int32 — concatenated payload words
+    idx: jax.Array,              # (M, 128) int32 — low word index per output
+    shift: jax.Array,            # (M, 128) int32 — byte misalignment * 8
+    *,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Gather byte-unaligned word regions: each output word splices two
+    neighboring source words at its region's constant misalignment.  The
+    caller must pad ``src`` so ``idx + 1`` stays in range."""
+    m, lanes = idx.shape
+    s, _ = src.shape
+    br = min(block_rows, max(m, 1))
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=pl.GridSpec(
+            grid=(pl.cdiv(m, br),),
+            in_specs=[
+                pl.BlockSpec((s, lanes), lambda i: (0, 0)),
+                pl.BlockSpec((br, lanes), lambda i: (i, 0)),
+                pl.BlockSpec((br, lanes), lambda i: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((br, lanes), lambda i: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, lanes), jnp.int32),
+        interpret=interpret,
+    )(src, idx, shift)

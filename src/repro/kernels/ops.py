@@ -13,11 +13,20 @@ from repro.kernels.bucketize import bucketize as _bucketize_pallas
 # the fused oracle is hot enough (whole transform waves) to deserve XLA
 # compilation rather than eager per-op dispatch
 _fused_ref = jax.jit(ref.fused_transform)
+from repro.kernels.decode import dense_unpack as _dense_unpack_pallas
+from repro.kernels.decode import ragged_gather as _ragged_gather_pallas
+from repro.kernels.decode import xor_decrypt as _xor_pallas
 from repro.kernels.embedding_bag import embedding_bag as _embag_pallas
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.fused_transform import fused_transform as _fused_pallas
 from repro.kernels.sigrid_hash import sigrid_hash as _sigrid_pallas
 from repro.kernels.ssd_chunk import ssd_chunk_forward as _ssd_pallas
+
+# the decode oracles run whole-stripe batches per call — worth XLA
+# compilation for the off-TPU fused path, like the transform oracle
+_xor_ref = jax.jit(ref.xor_decrypt)
+_dense_unpack_ref = jax.jit(ref.dense_unpack)
+_ragged_gather_ref = jax.jit(ref.ragged_gather)
 
 
 def _on_tpu() -> bool:
@@ -49,6 +58,29 @@ def fused_transform(ids, op_codes, param0, param1, borders=None, *,
             interpret=not _on_tpu(),
         )
     return _fused_ref(ids, op_codes, param0, param1, borders)
+
+
+def xor_decrypt(words, *, use_pallas: Optional[bool] = None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return _xor_pallas(words, interpret=not _on_tpu())
+    return _xor_ref(words)
+
+
+def dense_unpack(bitmap_words, values, *, use_pallas: Optional[bool] = None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return _dense_unpack_pallas(bitmap_words, values,
+                                    interpret=not _on_tpu())
+    return _dense_unpack_ref(bitmap_words, values)
+
+
+def ragged_gather(src, idx, shift, *, use_pallas: Optional[bool] = None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return _ragged_gather_pallas(src, idx, shift,
+                                     interpret=not _on_tpu())
+    return _ragged_gather_ref(src, idx, shift)
 
 
 def embedding_bag(table, ids, mask, *, mode: str = "mean",

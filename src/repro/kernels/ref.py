@@ -154,6 +154,47 @@ def fused_transform_static(
     return out.astype(jnp.int32)
 
 
+# batched stripe-decode oracles (mirror kernels.decode — §6.3 extract)
+XOR_KEY32 = 0x5A5A5A5A        # dwrf._XOR_KEY replicated into each byte
+NAN_BITS = 0x7FC00000         # float32 quiet-NaN bits (np.full(nan) fill)
+
+
+def xor_decrypt(words: jax.Array) -> jax.Array:
+    """(n, 128) int32 stream words -> XOR-decrypted words (byte-wise XOR
+    is position-local, so the little-endian word view is exact)."""
+    return words ^ jnp.int32(XOR_KEY32)
+
+
+def dense_unpack(bitmap_words: jax.Array, values: jax.Array) -> jax.Array:
+    """Batched presence-bitmap unpack + dense scatter.
+
+    bitmap_words: (F, W) int32 — ``np.packbits`` bytes as LE words;
+    values: (F, C) int32 — present float32 values as bit patterns.
+    Returns (F, W*32) int32 f32 bits, NaN bits where absent.
+    """
+    feats, w = bitmap_words.shape
+    lane = jnp.arange(32, dtype=jnp.int32)[None, None, :]
+    # packbits is MSB-first per byte; LE words put row 32w+k at bit
+    # 8*(k//8) + 7 - (k%8)
+    shift = (lane & ~7) + 7 - (lane & 7)
+    bits = jax.lax.shift_right_logical(bitmap_words[:, :, None], shift) & 1
+    bits = bits.reshape(feats, w * 32)
+    rank = jnp.cumsum(bits, axis=1) - 1
+    idx = jnp.clip(rank, 0, values.shape[1] - 1)
+    gathered = jnp.take_along_axis(values, idx, axis=1)
+    return jnp.where(bits == 1, gathered, jnp.int32(NAN_BITS))
+
+
+def ragged_gather(src: jax.Array, idx: jax.Array, shift: jax.Array) -> jax.Array:
+    """Byte-unaligned word gather: out = src[idx] >> shift | src[idx+1] <<
+    (32-shift).  src: (S, 128) i32; idx/shift: (M, 128) i32."""
+    flat = src.reshape(-1)
+    lo = jax.lax.shift_right_logical(jnp.take(flat, idx, axis=0), shift)
+    hi = jnp.take(flat, idx + 1, axis=0)
+    hi = jnp.where(shift == 0, 0, jax.lax.shift_left(hi, (32 - shift) & 31))
+    return lo | hi
+
+
 def embedding_bag(
     table: jax.Array,       # (V, E) f32
     ids: jax.Array,         # (B, L) int32

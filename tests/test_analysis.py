@@ -348,6 +348,55 @@ def test_k002_dispatch_negative_covered_and_ops_absent(tmp_path):
     assert _findings(bare, "REPRO-K002") == []
 
 
+def test_k002_decode_kernel_without_differential_test(tmp_path):
+    # a public kernel in kernels/decode.py absent from tests/test_decode.py
+    # is an extract-path op outside the parity net (ISSUE 10)
+    repo = _repo(tmp_path, {
+        "src/repro/kernels/fused_transform.py": "OP_FOO = 0\n",
+        "src/repro/kernels/ref.py": "OP_FOO = 0\n",
+        "tests/test_engine.py": "OP_FOO",
+        "src/repro/kernels/decode.py": """\
+            def xor_decrypt_kernel(w):
+                return w
+
+            def _pad(w):
+                return w
+        """,
+        "tests/test_decode.py": "def test_nothing():\n    pass\n",
+    })
+    f = _findings(repo, "REPRO-K002")
+    assert len(f) == 1 and "xor_decrypt_kernel" in f[0].message \
+        and "test_decode" in f[0].message
+
+
+def test_k002_decode_suite_missing_entirely(tmp_path):
+    repo = _repo(tmp_path, {
+        "src/repro/kernels/fused_transform.py": "OP_FOO = 0\n",
+        "src/repro/kernels/ref.py": "OP_FOO = 0\n",
+        "tests/test_engine.py": "OP_FOO",
+        "src/repro/kernels/decode.py": "def dense_unpack_kernel(b, v):\n"
+                                       "    return v\n",
+    })
+    f = _findings(repo, "REPRO-K002")
+    assert len(f) == 1 and "decode differential suite missing" in f[0].message
+
+
+def test_k002_decode_negative_covered_and_module_absent(tmp_path):
+    repo = _repo(tmp_path, {
+        "src/repro/kernels/fused_transform.py": "OP_FOO = 0\n",
+        "src/repro/kernels/ref.py": "OP_FOO = 0\n",
+        "tests/test_engine.py": "OP_FOO",
+        "src/repro/kernels/decode.py": "def ragged_gather_kernel(s, i, h):\n"
+                                       "    return s\n",
+        "tests/test_decode.py": "def test_gather():\n"
+                                "    ragged_gather_kernel(1, 2, 3)\n",
+    })
+    assert _findings(repo, "REPRO-K002") == []
+    bare = _kernel_repo(tmp_path / "bare2", "OP_FOO = 0\n", "OP_FOO = 0\n",
+                        "OP_FOO")
+    assert _findings(bare, "REPRO-K002") == []
+
+
 # -- REPRO-M001/M002: metrics contract ---------------------------------------
 
 WORKER_METRICS = """\

@@ -145,3 +145,45 @@ def test_derived_guard_skipped_when_row_absent(tmp_path):
     rc = bench_diff.main([_write(tmp_path, "old.json", old),
                           _write(tmp_path, "new.json", new)])
     assert rc == 0
+
+
+# -- derived-metric guards (ISSUE 10: extract cut / launch amortization) ----
+
+
+def _extract_report(amort: float, cut: float) -> dict:
+    # derived values carry "x" ratio suffixes exactly as bench_extract.py
+    # emits them; the parser must still guard the numbers underneath
+    return _report(extract={"metrics": [
+        ("extract.numpy_per_stream", 5000.0, "launches=1088 streams=513"),
+        ("extract.fused_batched", 3600.0,
+         f"launches=3 amortization={amort:.0f}x extract_cut={cut:.2f}x"),
+    ]})
+
+
+def test_extract_cut_drop_past_floor_is_regression(tmp_path, capsys):
+    old = _extract_report(amort=342, cut=1.40)
+    new = _extract_report(amort=342, cut=0.90)
+    rc = bench_diff.main([_write(tmp_path, "old.json", old),
+                          _write(tmp_path, "new.json", new)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "REGRESSION" in out and "fused_batched:extract_cut" in out
+
+
+def test_amortization_collapse_is_regression(tmp_path, capsys):
+    old = _extract_report(amort=342, cut=1.40)
+    new = _extract_report(amort=40, cut=1.40)
+    rc = bench_diff.main([_write(tmp_path, "old.json", old),
+                          _write(tmp_path, "new.json", new)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "fused_batched:amortization" in out
+
+
+def test_extract_wobble_within_tolerance_passes(tmp_path):
+    # a small cut dip and amortization drift stay under the floors
+    old = _extract_report(amort=342, cut=1.40)
+    new = _extract_report(amort=300, cut=1.25)
+    rc = bench_diff.main([_write(tmp_path, "old.json", old),
+                          _write(tmp_path, "new.json", new)])
+    assert rc == 0

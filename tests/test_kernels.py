@@ -352,3 +352,76 @@ def test_embedding_bag_ref_matches_dlrm_pooling():
         np.testing.assert_allclose(
             np.asarray(pooled)[:, t], np.asarray(bagged), atol=1e-6
         )
+
+
+# -- stripe decode ops (ISSUE 10): pallas vs oracle vs numpy semantics -------
+
+
+@pytest.mark.parametrize("n", [1, 7, 64])
+def test_xor_decrypt_sweep(n):
+    rng = np.random.default_rng(10)
+    raw = rng.integers(0, 256, n * 512, dtype=np.uint8)
+    words = jnp.asarray(raw.view("<i4").reshape(n, 128))
+    a = ops.xor_decrypt(words, use_pallas=True)
+    b = ref.xor_decrypt(words)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # byte-wise XOR semantics: the word kernel must equal numpy on bytes
+    np.testing.assert_array_equal(
+        np.asarray(a).reshape(-1).view(np.uint8), raw ^ 0x5A
+    )
+
+
+@pytest.mark.parametrize("feats,rows", [(1, 32), (13, 100), (96, 128)])
+def test_dense_unpack_sweep(feats, rows):
+    rng = np.random.default_rng(11)
+    w = -(-rows // 32)
+    present = rng.random((feats, rows)) < 0.7
+    cap = max(int(present.sum(axis=1).max()), 1)
+    bm = np.zeros((feats, w * 4), np.uint8)
+    vals = np.zeros((feats, cap), np.int32)
+    for f in range(feats):
+        bm[f, : -(-rows // 8)] = np.packbits(present[f])
+        nz = int(present[f].sum())
+        vals[f, :nz] = (
+            rng.normal(0, 2, nz).astype(np.float32).view(np.int32)
+        )
+    bw = jnp.asarray(bm.view("<i4"))
+    vj = jnp.asarray(vals)
+    a = ops.dense_unpack(bw, vj, use_pallas=True)
+    b = ref.dense_unpack(bw, vj)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # scatter semantics vs plain numpy: values land at present rows,
+    # NaN bits elsewhere
+    got = np.asarray(a)[:, :rows].view(np.float32)
+    for f in range(feats):
+        want = np.full(rows, np.nan, np.float32)
+        nz = int(present[f].sum())
+        want[present[f]] = vals[f, :nz].view(np.float32)
+        np.testing.assert_array_equal(
+            got[f].view(np.int32), want.view(np.int32)
+        )
+
+
+@pytest.mark.parametrize("s,m", [(2, 1), (8, 5), (32, 16)])
+def test_ragged_gather_sweep(s, m):
+    rng = np.random.default_rng(12)
+    src = rng.integers(-(1 << 31), 1 << 31, (s, 128), dtype=np.int64)
+    src = src.astype(np.int32)
+    idx = rng.integers(0, s * 128 - 1, (m, 128), dtype=np.int32)
+    shift = (rng.integers(0, 4, (m, 128), dtype=np.int32) * 8).astype(np.int32)
+    a = ops.ragged_gather(
+        jnp.asarray(src), jnp.asarray(idx), jnp.asarray(shift),
+        use_pallas=True,
+    )
+    b = ref.ragged_gather(jnp.asarray(src), jnp.asarray(idx), jnp.asarray(shift))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # byte-offset semantics vs numpy: each lane reads 4 bytes at byte
+    # offset 4*idx + shift/8 of the flat stream
+    flat = src.reshape(-1).view(np.uint8)
+    byte_off = idx.astype(np.int64) * 4 + shift // 8
+    want = np.zeros((m, 128), np.int32)
+    for r in range(m):
+        for c in range(128):
+            o = int(byte_off[r, c])
+            want[r, c] = np.frombuffer(flat[o:o + 4].tobytes(), "<i4")[0]
+    np.testing.assert_array_equal(np.asarray(a), want)

@@ -156,6 +156,48 @@ def test_checkpoint_restore_preserves_stripe_alignment():
            {(s.row_start, s.row_end) for s in m._splits.values()}
 
 
+def test_map_plan_skips_labels_when_excluded():
+    """Regression (ISSUE 10): ``plan_reads(include_labels=False)`` on a
+    map-encoded file still planned the labels streams, inflating
+    bytes_wanted for every label-free projection (projection_stats,
+    prefetch sizing)."""
+    t = _table(flattened=False, name="rpml")
+    footer = t.partitions[0].footer
+    proj = t.schema.logged_ids[:10]
+    with_labels = plan_reads(footer, proj, 0, include_labels=True)
+    without = plan_reads(footer, proj, 0, include_labels=False)
+    assert any(s.kind == "labels" for _, _, s in with_labels.wanted)
+    assert not any(s.kind == "labels" for _, _, s in without.wanted)
+    label_bytes = sum(
+        s.length for st in footer.stripes for s in st.streams
+        if s.kind == "labels"
+    )
+    assert label_bytes > 0
+    assert without.bytes_wanted == with_labels.bytes_wanted - label_bytes
+    # projection_stats consumes the label-free plan: bytes_used must not
+    # count label bytes the projection never asked for
+    r = TableReader(t, proj)
+    stats = r.projection_stats()
+    assert stats["bytes_used"] == float(without.bytes_wanted)
+
+
+def test_iter_stripes_reports_io_sizes():
+    """Regression (ISSUE 10): ``StripeRead`` carried no per-extent I/O
+    sizes, so streaming consumers lost the Table-6 size histogram that
+    ``read_rows`` reports."""
+    t = _table(name="rpio")
+    meta = t.partitions[0]
+    proj = t.schema.logged_ids[:10]
+    for window in (0, COALESCE_WINDOW):
+        r = TableReader(t, proj, coalesce_window=window)
+        for sr in r.iter_stripes(meta, 0, ROWS):
+            assert sr.io_sizes
+            assert sum(sr.io_sizes) == sr.bytes_read
+        if window:
+            # coalescing merges the per-stream extents into a few I/Os
+            assert len(sr.io_sizes) < len(proj)
+
+
 def test_split_over_read_amplification_model():
     # pre-fix path: amplification = splits per partition
     assert split_over_read_amplification(ROWS, ROWS // 4, STRIPE,
@@ -165,3 +207,141 @@ def test_split_over_read_amplification_model():
     # split-scoped but unaligned: bounded stripe-edge waste only
     amp = split_over_read_amplification(ROWS, 300, STRIPE, stripe_aligned=False)
     assert 1.0 < amp < 2.0
+
+
+# ---------------------------------------------------------------------------
+# DWRF round-trip parity (ISSUE 10 satellites)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:      # hypothesis is dev-only; the suite must pass without
+    HAVE_HYPOTHESIS = False
+
+from repro.core.schema import ColumnBatch, SparseColumn
+
+
+def _bits(a):
+    return (a.view(np.int32) if a.dtype == np.float32 else a).tobytes()
+
+
+def _assert_batches_bit_identical(a, b):
+    """Stricter than ``_assert_batches_identical``: exact bit patterns
+    (NaN payloads included) and scores *presence* — the lossy axis the
+    legacy sparse_map layout collapsed."""
+    assert a.num_rows == b.num_rows
+    assert set(a.dense) == set(b.dense) and set(a.sparse) == set(b.sparse)
+    for fid in a.dense:
+        assert _bits(a.dense[fid]) == _bits(b.dense[fid])
+    for fid in a.sparse:
+        x, y = a.sparse[fid], b.sparse[fid]
+        assert _bits(x.offsets) == _bits(y.offsets)
+        assert _bits(x.values) == _bits(y.values)
+        assert (x.scores is None) == (y.scores is None), fid
+        if x.scores is not None:
+            assert _bits(x.scores) == _bits(y.scores)
+    assert (a.labels is None) == (b.labels is None)
+    if a.labels is not None:
+        assert _bits(a.labels) == _bits(b.labels)
+
+
+def _random_batch(seed):
+    """Random batch over the decoder's dispatch space: 0-row/ragged row
+    counts, empty/partial/full dense presence, 0-nnz features, and every
+    scores shape (absent, present, present-but-empty)."""
+    rng = np.random.default_rng(seed)
+    rows = int(rng.choice([0, 1, 7, 64, 257]))
+    dense = {}
+    for f in range(int(rng.integers(0, 4))):
+        col = np.full(rows, np.nan, np.float32)
+        present = rng.random(rows) < rng.choice([0.0, 0.5, 1.0])
+        col[present] = rng.standard_normal(int(present.sum())).astype(np.float32)
+        dense[f] = col
+    sparse = {}
+    for f in range(10, 10 + int(rng.integers(0, 4))):
+        counts = rng.integers(0, int(rng.choice([1, 4])), rows) \
+            if rows else np.zeros(0, np.int64)
+        off = np.zeros(rows + 1, np.int64)
+        np.cumsum(counts, out=off[1:])
+        vals = rng.integers(0, 1 << 40, int(off[-1])).astype(np.int64)
+        scored = bool(rng.integers(0, 2))
+        sc = rng.random(int(off[-1])).astype(np.float32) if scored else None
+        sparse[f] = SparseColumn(offsets=off, values=vals, scores=sc)
+    labels = rng.random(rows).astype(np.float32) \
+        if rng.integers(0, 2) else None
+    return ColumnBatch(num_rows=rows, dense=dense, sparse=sparse, labels=labels)
+
+
+def _decode_whole_file(f):
+    parts = []
+    for stripe in f.footer.stripes:
+        fetch = {(s.fid, s.kind): f.data[s.offset: s.offset + s.length]
+                 for s in stripe.streams}
+        fids = sorted({s.fid for s in stripe.streams if s.fid >= 0})
+        if not f.footer.flattened:
+            fids = f.footer.feature_order
+        parts.append(dwrf.decode_stripe_features(stripe, fetch, fids))
+    return concat_batches(parts) if parts else None
+
+
+def _check_roundtrip(seed, flattened, codec):
+    batch = _random_batch(seed)
+    f = dwrf.write_dwrf(batch, dwrf.DwrfWriterOptions(
+        flattened=flattened, stripe_rows=64, codec=codec))
+    got = _decode_whole_file(f)
+    if got is None:
+        assert batch.num_rows == 0
+        return
+    # flattened files only materialize features that exist in the batch;
+    # dense features with no sparse twin etc. all round-trip exactly
+    _assert_batches_bit_identical(batch, got)
+
+
+@pytest.mark.parametrize("flattened", [True, False])
+@pytest.mark.parametrize("codec", ["raw", "zlib"])
+@pytest.mark.parametrize("seed", range(8))
+def test_dwrf_roundtrip_bit_identical_seeded(flattened, codec, seed):
+    _check_roundtrip(seed, flattened, codec)
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(seed=st.integers(0, 2 ** 32 - 1),
+           flattened=st.booleans(),
+           codec=st.sampled_from(["raw", "zlib"]))
+    @settings(max_examples=40, deadline=None)
+    def test_dwrf_roundtrip_bit_identical_hypothesis(seed, flattened, codec):
+        _check_roundtrip(seed, flattened, codec)
+
+
+def test_map_roundtrip_preserves_empty_scores_presence():
+    """Regression (ISSUE 10): the legacy sparse_map layout inferred scores
+    presence from array length, so a scored feature hitting a 0-nnz stripe
+    decoded with ``scores=None`` on the map path (diverging from the
+    flattened encoding of the same batch).  The v2 layout carries an
+    explicit presence flag."""
+    rows = 32
+    off = np.zeros(rows + 1, np.int64)            # 0 nnz everywhere
+    batch = ColumnBatch(
+        num_rows=rows, dense={},
+        sparse={7: SparseColumn(offsets=off,
+                                values=np.zeros(0, np.int64),
+                                scores=np.zeros(0, np.float32))},
+        labels=None,
+    )
+    for flattened in (True, False):
+        f = dwrf.write_dwrf(batch, dwrf.DwrfWriterOptions(
+            flattened=flattened, stripe_rows=rows, codec="raw"))
+        got = _decode_whole_file(f)
+        assert got.sparse[7].scores is not None, f"flattened={flattened}"
+        assert len(got.sparse[7].scores) == 0
+    # and the v2 blob is self-describing: its first packed array is the
+    # format sentinel, so legacy readers can never misparse it as fids
+    stream = next(s for s in f.footer.stripes[0].streams
+                  if s.kind == "sparse_map")
+    payload = dwrf.decode_stream(f.data[stream.offset: stream.offset + stream.length])
+    arrays = dwrf._unpack_arrays(payload)
+    assert int(arrays[0][0]) == dwrf.SPARSE_MAP_V2
+    fids, flags, base = dwrf.sparse_map_layout(arrays)
+    assert list(fids) == [7] and list(flags) == [True] and base == 3
